@@ -1,0 +1,40 @@
+"""Benchmark: parallel Floyd-Warshall (paper §5) — faithful Algorithm 3 vs
+the blocked beyond-paper variant, on a 2×2 grid.  CSV: name,us_per_call,derived."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import floyd_warshall, blocked_floyd_warshall, make_grid_mesh
+
+
+def timeit(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    mesh = make_grid_mesh((2, 2), ("x", "y"))
+    for n in (128, 256):
+        rng = np.random.RandomState(0)
+        W = rng.rand(n, n).astype(np.float32) * 10
+        W[np.diag_indices(n)] = 0
+        D = jnp.array(W)
+        t_faithful = timeit(jax.jit(lambda d: floyd_warshall(d, mesh)), D)
+        t_blocked = timeit(jax.jit(lambda d: blocked_floyd_warshall(d, mesh)), D)
+        print(f"fw_faithful_n{n},{t_faithful*1e6:.0f},alg3")
+        print(f"fw_blocked_n{n},{t_blocked*1e6:.0f},speedup={t_faithful/t_blocked:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

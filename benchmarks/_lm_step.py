@@ -1,0 +1,50 @@
+"""Benchmark: framework train/decode step cost on reduced configs (CPU).
+
+Ties the paper's "abstraction costs nothing" claim to the LM framework: the
+foopar-TP (algebra) matmul path vs the pjit path on the same reduced model.
+CSV: name,us_per_call,derived.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro import configs
+from repro.config import ParallelConfig, ShapeConfig, TrainConfig
+from repro.launch.train import reduced
+from repro.parallel import steps as S
+from repro.data import make_batch_iterator
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def main():
+    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    tcfg = TrainConfig(warmup_steps=1, z_loss=0.0)
+    shape = ShapeConfig("bench", "train", 128, 8)
+    for arch in ("llama3.2-3b", "mixtral-8x22b", "zamba2-1.2b", "xlstm-1.3b"):
+        cfg = reduced(configs.get(arch))
+        state = S.init_train_state(jax.random.PRNGKey(0), cfg, pcfg)
+        step = jax.jit(S.make_train_step(cfg, pcfg, tcfg, None))
+        batch = next(make_batch_iterator(cfg, shape))
+        t, (state2, m) = timeit(step, state, batch)
+        toks = shape.seq_len * shape.global_batch
+        print(f"lmstep_{arch},{t*1e6:.0f},tok_per_s={toks/t:.0f};"
+              f"loss={float(m['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark: parallel matmul efficiency (paper Fig. 5, CPU analogue).
+
+The paper measures DNS-matmul efficiency vs single-core peak on Carver
+(512 cores).  Here: Grid3D DNS on a 2×2×2 8-device host mesh vs the
+single-device matmul, E = T_serial / (p · T_p).  Also the generic
+Algorithm-1 variant to expose its Θ(p^{5/3}) overhead experimentally.
+CSV: name,us_per_call,derived.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import dns_matmul, generic_matmul, make_grid_mesh
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    mesh3 = make_grid_mesh((2, 2, 2), ("x", "y", "z"))
+    mesh1 = make_grid_mesh((8,), ("z",))
+    for n in (256, 512, 1024):
+        A = jnp.array(np.random.RandomState(0).randn(n, n), jnp.float32)
+        B = jnp.array(np.random.RandomState(1).randn(n, n), jnp.float32)
+        t_serial = timeit(jax.jit(jnp.matmul), A, B)
+        t_dns = timeit(jax.jit(lambda a, b: dns_matmul(a, b, mesh3)), A, B)
+        t_gen = timeit(jax.jit(lambda a, b: generic_matmul(a, b, mesh1, "z")),
+                       A, B)
+        e_dns = t_serial / (8 * t_dns)
+        e_gen = t_serial / (8 * t_gen)
+        gflops = 2 * n ** 3 / t_dns / 1e9
+        print(f"fig5_dns_n{n},{t_dns*1e6:.0f},eff={e_dns:.3f};gflops={gflops:.1f}")
+        print(f"fig5_generic_n{n},{t_gen*1e6:.0f},eff={e_gen:.3f}")
+
+
+if __name__ == "__main__":
+    main()

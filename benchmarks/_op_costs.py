@@ -1,0 +1,69 @@
+"""Benchmark: Table-1 group-operation costs (paper Table 1).
+
+Measures each DSeq op on an 8-process CPU group and reports measured
+microseconds next to the cost model's Θ-shape (scaled to the measured t_s,
+t_w of this host).  CSV: name,us_per_call,derived.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import DSeq, spmd, make_grid_mesh
+from repro.core import costmodel
+
+
+def bench(fn, *args, iters=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    mesh = make_grid_mesh((8,), ("x",))
+    m = 1 << 16  # elements per process
+    x = jnp.arange(8.0 * m).reshape(8, m)
+
+    ops = {
+        "mapD": lambda xl: DSeq(xl, "x").mapD(lambda v: v * 2 + 1).local,
+        "zipWithD": lambda xl: DSeq(xl, "x").zipWithD(DSeq(xl, "x"),
+                                                      jnp.add).local,
+        "reduceD_sum": lambda xl: DSeq(xl[0], "x").reduceD("sum")[None],
+        "reduceD_tree": lambda xl: DSeq(xl[0], "x").reduceD(jnp.add)[None],
+        "shiftD": lambda xl: DSeq(xl, "x").shiftD(1).local,
+        "allGatherD": lambda xl: DSeq(xl[0], "x").allGatherD()[None],
+        "applyD_bcast": lambda xl: DSeq(xl[0], "x").apply(3)[None],
+        "allToAllD": lambda xl: DSeq(xl.reshape(8, -1), "x").allToAllD()
+        .local.reshape(1, -1),
+    }
+    model = {
+        "mapD": 0.0, "zipWithD": 0.0,
+        "reduceD_sum": costmodel.t_reduce(m * 4, 8),
+        "reduceD_tree": costmodel.t_reduce(m * 4, 8),
+        "shiftD": costmodel.t_shift(m * 4, 8),
+        "allGatherD": costmodel.t_all_gather(m * 4, 8),
+        "applyD_bcast": costmodel.t_broadcast(m * 4, 8),
+        "allToAllD": costmodel.t_all_to_all(m * 4 / 8, 8),
+    }
+    for name, body in ops.items():
+        out_spec = P("x", None) if name in ("mapD", "zipWithD", "shiftD",
+                                            "reduceD_sum", "reduceD_tree",
+                                            "applyD_bcast", "allToAllD") \
+            else P(None, None)
+        in_spec = P("x", None)
+        f = jax.jit(spmd(body, mesh, in_specs=in_spec, out_specs=out_spec))
+        us = bench(f, x)
+        print(f"table1_{name},{us:.1f},model_icis={model[name]*1e6:.2f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  Table 1  (op costs)          -> _op_costs.py
+  Fig. 5   (matmul efficiency) -> _matmul_efficiency.py
+  §5       (Floyd-Warshall)    -> _floyd_warshall.py
+  §4.2/4.3 (isoefficiency)     -> _isoefficiency.py (analytical, in-process)
+  framework step cost          -> _lm_step.py
+
+Each multi-device benchmark runs in a subprocess (needs its own
+XLA_FLAGS=--xla_force_host_platform_device_count before jax init).
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SUBPROCESS_BENCHES = ["_op_costs.py", "_matmul_efficiency.py",
+                      "_floyd_warshall.py", "_lm_step.py"]
+
+
+def _isoefficiency() -> None:
+    """Paper §4.2.1/§4.3: evaluate the isoefficiency functions and verify the
+    scalability ordering generic ≫ grid ≈ DNS (analysis, no devices)."""
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    from repro.core import costmodel as cm
+    for p in (64, 512, 4096):
+        w_gen = cm.isoefficiency_matmul_generic(p)
+        w_grid = cm.isoefficiency_matmul_grid(p)
+        w_fw = cm.isoefficiency_floyd_warshall(p)
+        print(f"iso_generic_p{p},0,W={w_gen:.3e}")
+        print(f"iso_grid_p{p},0,W={w_grid:.3e};ratio_vs_generic={w_gen/w_grid:.1f}")
+        print(f"iso_fw_p{p},0,W={w_fw:.3e}")
+    # predicted DNS time at TPU scale (ties Table 1 to the roofline)
+    for n, q in ((40000, 8),):
+        pred = cm.dns_matmul_cost(n, q, bytes_per_elt=2)
+        print(f"iso_dns_pred_n{n}_p{q**3},{pred['total_s']*1e6:.0f},"
+              f"eff={pred['serial_s']/(q**3*pred['total_s']):.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _isoefficiency()
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    for bench in SUBPROCESS_BENCHES:
+        r = subprocess.run([sys.executable, os.path.join(HERE, bench)],
+                           capture_output=True, text=True, env=env,
+                           timeout=1200)
+        if r.returncode != 0:
+            print(f"{bench},ERROR,{r.stderr[-400:]!r}", file=sys.stderr)
+            raise SystemExit(f"benchmark {bench} failed")
+        for line in r.stdout.splitlines():
+            if "," in line and not line.startswith(("W", "I", "/")):
+                print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""FooPar-in-JAX quickstart — the paper's §3.2 SPMD example.
+
+    def ones(i: Int) = i.toBinaryString.count(_ == '1')
+    val counts = (0 until worldSize) mapD ones
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import DSeq, spmd, make_grid_mesh
+
+mesh = make_grid_mesh((8,), ("x",))
+
+# the distributed sequence 0..worldSize-1; element i lives on process i
+seq = jnp.arange(8, dtype=jnp.uint32)
+
+
+def program(local):
+    s = DSeq(local[0], "x")
+    # mapD: every process counts the 1-bits of ITS element (popcount)
+    counts = s.mapD(lambda v: jax.lax.population_count(v))
+    # chain group ops: total ones via reduceD (+), then broadcast of element 3
+    total = counts.reduceD("sum")
+    third = counts.apply(3)
+    return counts.local[None], total, third
+
+
+counts, total, third = spmd(program, mesh, in_specs=P("x"),
+                            out_specs=(P("x"), P(), P()))(seq)
+print("per-process popcounts:", counts.tolist())       # [0,1,1,2,1,2,2,3]
+print("reduceD('+')        :", int(total))             # 12
+print("apply(3) broadcast  :", int(third))             # 2
+assert counts.tolist() == [0, 1, 1, 2, 1, 2, 2, 3] and int(total) == 12
+print("OK — deadlock-free by construction: no process ever sent a message.")

@@ -1,0 +1,12 @@
+"""Serve a reduced LM with batched requests (production serving driver).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch chatglm3-6b]
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = [sys.argv[0], "--requests", "4", "--prompt-len", "16", "--gen", "16"] \
+    + sys.argv[1:]
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps with
+fault-tolerant checkpointing (delegates to the production launcher).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch mixtral-8x22b]
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = [sys.argv[0], "--steps", "200", "--batch", "8", "--seq", "128",
+            "--ckpt-dir", "/tmp/repro_example_ckpt"] + sys.argv[1:]
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .store import save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer

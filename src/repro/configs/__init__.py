@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(name)`` returns the ModelConfig; ``ARCHS`` lists all ids;
+``cells(name)`` yields the (arch × shape) cells that apply to it
+(long_500k only for sub-quadratic archs, per the assignment).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = [
+    "xlstm-1.3b",
+    "llama3.2-3b",
+    "command-r-plus-104b",
+    "llama3-405b",
+    "chatglm3-6b",
+    "zamba2-1.2b",
+    "chameleon-34b",
+    "whisper-base",
+    "kimi-k2-1t-a32b",
+    "mixtral-8x22b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[name]}")
+    return mod.CONFIG
+
+
+def shapes_for(name: str) -> List[ShapeConfig]:
+    cfg = get(name)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # full-attention archs skip 500k decode (DESIGN.md §4)
+        out.append(s)
+    return out
+
+
+def cells() -> List[tuple]:
+    """All (arch, shape) dry-run cells, including skip markers."""
+    out = []
+    for a in ARCHS:
+        cfg = get(a)
+        for s in SHAPES.values():
+            skip = s.name == "long_500k" and not cfg.sub_quadratic
+            out.append((a, s.name, skip))
+    return out

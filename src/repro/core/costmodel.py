@@ -1,0 +1,219 @@
+"""FooPar Table-1 cost model + isoefficiency analysis, with TPU constants.
+
+The paper's message-passing cost is t_c = t_s + t_w * m (start-up + per-word).
+We keep the same symbolic model and instantiate (t_s, t_w) per link class:
+
+  ICI  (intra-pod, 2D/3D torus)  ~50 GB/s per link, ~1 us hop latency
+  DCI  (pod-to-pod)              ~25 GB/s effective, ~10 us latency
+  HBM  (for roofline memory term) 819 GB/s per chip
+  MXU  197 TFLOP/s bf16 per chip
+
+All Table-1 costs are expressed in seconds for a message of m *bytes* over a
+group of p processes.  These formulas are what ``parallel/sharding.py`` uses
+to rank candidate layouts and what the §Roofline collective term is checked
+against.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e class, per the assignment).
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+DCI_BW = 25e9             # bytes/s effective pod-to-pod
+ICI_LATENCY = 1e-6        # t_s, seconds
+DCI_LATENCY = 10e-6
+HBM_PER_CHIP = 16 * 2**30  # 16 GiB (v5e)
+
+
+@dataclass(frozen=True)
+class LinkClass:
+    t_s: float  # start-up (latency) seconds
+    t_w: float  # seconds per byte
+
+    @classmethod
+    def ici(cls) -> "LinkClass":
+        return cls(t_s=ICI_LATENCY, t_w=1.0 / ICI_BW)
+
+    @classmethod
+    def dci(cls) -> "LinkClass":
+        return cls(t_s=DCI_LATENCY, t_w=1.0 / DCI_BW)
+
+
+ICI = LinkClass.ici()
+DCI = LinkClass.dci()
+
+
+# ---------------------------------------------------------------------------
+# Table-1 cost formulas (paper §2 and Table 1).  m in bytes, p = group size.
+# ---------------------------------------------------------------------------
+def t_map(t_lambda: float) -> float:
+    """mapD / zipWithD: non-communicating."""
+    return t_lambda
+
+
+def t_reduce(m: float, p: int, link: LinkClass = ICI, t_lambda: float = 0.0) -> float:
+    """reduceD: Θ(log p (t_s + t_w m + T_λ(m))) — recursive doubling."""
+    if p <= 1:
+        return 0.0
+    return math.log2(p) * (link.t_s + link.t_w * m + t_lambda)
+
+
+def t_shift(m: float, p: int, link: LinkClass = ICI) -> float:
+    """shiftD: Θ(t_s + t_w m) (needs cross-section bandwidth O(p) — true on a torus)."""
+    return link.t_s + link.t_w * m if p > 1 else 0.0
+
+
+def t_broadcast(m: float, p: int, link: LinkClass = ICI) -> float:
+    """apply(i) / one-to-all broadcast: Θ(log p (t_s + t_w m))."""
+    if p <= 1:
+        return 0.0
+    return math.log2(p) * (link.t_s + link.t_w * m)
+
+
+def t_all_gather(m: float, p: int, link: LinkClass = ICI) -> float:
+    """allGatherD: Θ((t_s + t_w m)(p-1)) — ring; m is the per-process element."""
+    return (link.t_s + link.t_w * m) * (p - 1) if p > 1 else 0.0
+
+
+def t_all_to_all(m: float, p: int, link: LinkClass = ICI) -> float:
+    """allToAllD: Θ(t_s log p + t_w m (p-1)); m is the per-destination element."""
+    if p <= 1:
+        return 0.0
+    return link.t_s * math.log2(p) + link.t_w * m * (p - 1)
+
+
+def t_all_reduce(m: float, p: int, link: LinkClass = ICI) -> float:
+    """XLA all-reduce (reduce-scatter + all-gather): 2 m (p-1)/p bandwidth term."""
+    if p <= 1:
+        return 0.0
+    return 2.0 * (link.t_s * math.log2(p) + link.t_w * m * (p - 1) / p)
+
+
+def t_reduce_scatter(m: float, p: int, link: LinkClass = ICI) -> float:
+    if p <= 1:
+        return 0.0
+    return link.t_s * math.log2(p) + link.t_w * m * (p - 1) / p
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (per §Roofline of the experiment plan).
+# ---------------------------------------------------------------------------
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    *,
+    peak_flops: float = PEAK_FLOPS_BF16,
+    hbm_bw: float = HBM_BW,
+    link_bw: float = ICI_BW,
+) -> dict:
+    """The three roofline terms, in seconds.
+
+    ``hlo_flops``/``hlo_bytes`` are totals from ``compiled.cost_analysis()``
+    (already per-program = per-device in SPMD); ``collective_bytes`` is the
+    summed operand bytes of collective ops parsed from the HLO.
+    """
+    compute = hlo_flops / (chips * peak_flops)
+    memory = hlo_bytes / (chips * hbm_bw)
+    collective = collective_bytes / (chips * link_bw)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for one train step."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """Decode: 2 N per token per forward."""
+    return 2.0 * n_params_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# Isoefficiency (paper §2, §4.2.1, §4.3): W = K * T_o(W, p).
+# ---------------------------------------------------------------------------
+def efficiency(t_serial: float, t_parallel: float, p: int) -> float:
+    return t_serial / (p * t_parallel) if p * t_parallel > 0 else 0.0
+
+
+def overhead(t_serial: float, t_parallel: float, p: int) -> float:
+    """T_o(W, p) = p T_p - T_s."""
+    return p * t_parallel - t_serial
+
+
+def isoefficiency_matmul_generic(p: int) -> float:
+    """Paper §4.2.1: W ∈ Θ(p^{5/3}) for Algorithm 1 (for-loop emulation)."""
+    return p ** (5.0 / 3.0)
+
+
+def isoefficiency_matmul_grid(p: int) -> float:
+    """Paper §4.3 / DNS: W ∈ Θ(p log p)  (stated as Θ(n^3 + p log p))."""
+    return p * math.log2(max(p, 2))
+
+
+def isoefficiency_floyd_warshall(p: int) -> float:
+    """Paper §5: W ∈ Θ((√p log p)^3)."""
+    return (math.sqrt(p) * math.log2(max(p, 2))) ** 3
+
+
+def solve_isoefficiency(t_overhead_fn, p: int, k: float = 1.0, w0: float = 1.0, iters: int = 100) -> float:
+    """Numerically solve W = k * T_o(W, p) by fixed-point iteration.
+
+    ``t_overhead_fn(W, p)`` returns the overhead for problem size W on p
+    processes.  Returns the smallest W achieving the target efficiency
+    implied by k (E = 1 / (1 + 1/k) in the standard formulation).
+    """
+    w = w0
+    for _ in range(iters):
+        w_new = k * t_overhead_fn(w, p)
+        if w_new <= 0:
+            return w
+        if abs(w_new - w) / max(w, 1e-12) < 1e-9:
+            return w_new
+        w = 0.5 * w + 0.5 * w_new  # damped for stability
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Whole-algorithm cost predictions (used by benchmarks + sharding chooser).
+# ---------------------------------------------------------------------------
+def dns_matmul_cost(n: int, q: int, bytes_per_elt: int = 4, link: LinkClass = ICI,
+                    peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted parallel runtime of Grid3D DNS matmul on a q^3 grid.
+
+    T_p = 2 broadcasts (A, B along grid axes) + local multiply + reduceD over z.
+    Block size (n/q)^2 elements.
+    """
+    blk = (n // q) ** 2
+    m = blk * bytes_per_elt
+    t_bcast = 2 * t_broadcast(m, q, link)
+    t_mult = 2.0 * (n / q) ** 3 / peak_flops
+    t_red = t_reduce(m, q, link, t_lambda=blk / peak_flops)
+    return {
+        "broadcast_s": t_bcast,
+        "compute_s": t_mult,
+        "reduce_s": t_red,
+        "total_s": t_bcast + t_mult + t_red,
+        "serial_s": 2.0 * n**3 / peak_flops,
+        "p": q**3,
+    }
+
+
+def floyd_warshall_cost(n: int, q: int, bytes_per_elt: int = 4, link: LinkClass = ICI,
+                        peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted runtime of the 2D-grid FW (paper §5): n iterations of
+    (row+col broadcast of B elements over √p) + Θ(B^2) local update."""
+    b = n // q
+    m = b * bytes_per_elt
+    per_iter = 2 * t_broadcast(m, q, link) + (b * b) / peak_flops
+    return {"total_s": n * per_iter, "per_iter_s": per_iter, "p": q * q}

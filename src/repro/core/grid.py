@@ -1,0 +1,86 @@
+"""Cartesian grid abstractions (paper §4.3): GridN / Grid2D / Grid3D.
+
+A grid binds N mesh axes into a Cartesian process grid.  Each process has a
+coordinate tuple; ``seq(axis)`` returns the DSeq that is *variable* in that
+axis and constant in all the others — the paper's ``xSeq / ySeq / zSeq``.
+This is what lets multi-axis algorithms (DNS matmul, Floyd-Warshall) be
+written as chained functional ops per axis, with the Table-1 costs applying
+per-axis (group size = the axis extent, not p).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+from jax import lax
+
+from .dseq import DSeq
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class GridN:
+    """An N-dimensional Cartesian process grid over mesh axes ``axes``.
+
+    Used inside a ``shard_map`` body whose mesh contains those axes.  The
+    process's coordinate is ``self.coords`` (a tuple of traced ints).
+    """
+
+    axes: Tuple[str, ...]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.axes)
+
+    @property
+    def coords(self) -> Tuple[jax.Array, ...]:
+        return tuple(lax.axis_index(a) for a in self.axes)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(lax.axis_size(a) for a in self.axes)
+
+    def mapD(self, f: Callable[..., Pytree]) -> Pytree:
+        """Each process computes ``f(*coords)`` — the paper's
+        ``G mapD { case (i, j, k) => ... }`` (non-communicating; lazy/proxy
+        data is materialized per-process here)."""
+        return f(*self.coords)
+
+    def seq(self, axis: str, local: Pytree) -> DSeq:
+        """The distributed sequence variable in ``axis``, constant in the
+        remaining coordinates (paper's xSeq/ySeq/zSeq)."""
+        assert axis in self.axes
+        return DSeq(local, axis)
+
+
+class Grid2D(GridN):
+    def __init__(self, x_axis: str = "x", y_axis: str = "y"):
+        super().__init__(axes=(x_axis, y_axis))
+
+    def xSeq(self, local: Pytree) -> DSeq:  # variable in x, fixed y
+        return self.seq(self.axes[0], local)
+
+    def ySeq(self, local: Pytree) -> DSeq:
+        return self.seq(self.axes[1], local)
+
+
+class Grid3D(GridN):
+    def __init__(self, x_axis: str = "x", y_axis: str = "y", z_axis: str = "z"):
+        super().__init__(axes=(x_axis, y_axis, z_axis))
+
+    def xSeq(self, local: Pytree) -> DSeq:
+        return self.seq(self.axes[0], local)
+
+    def ySeq(self, local: Pytree) -> DSeq:
+        return self.seq(self.axes[1], local)
+
+    def zSeq(self, local: Pytree) -> DSeq:
+        return self.seq(self.axes[2], local)
+
+
+def make_grid_mesh(shape: Sequence[int], axes: Sequence[str] | None = None) -> jax.sharding.Mesh:
+    """Build a device mesh for an N-d grid on the available devices."""
+    axes = tuple(axes) if axes is not None else tuple("xyzw"[: len(shape)])
+    return jax.make_mesh(tuple(shape), axes)

@@ -1,0 +1,104 @@
+"""Tensor-parallel matmuls expressed in the FooPar algebra (first-class
+integration of the paper's technique into the LM framework).
+
+A Megatron-style TP layer is exactly a FooPar chain over the ``model`` axis:
+
+  column-parallel  y_shard = x @ W_shard            — mapD (no communication)
+  row-parallel     y = Σ_k x_shard @ W_shard        — zipWithD (·) ∘ reduceD (+)
+
+which is the same ``mapD/zipWithD → reduceD`` pattern as the paper's matrix
+multiplication (§4.2).  These are implemented with *partial-manual*
+``shard_map``: only the TP axis is manual (the algebra's communication group);
+batch/data axes stay auto-sharded so the ops compose inside pjit programs.
+
+``choose_tp_strategy`` ranks the two layouts with the Table-1 cost model —
+the paper's "analyzability" claim used as a runtime decision procedure.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import costmodel
+from .dseq import DSeq
+
+
+def _manual(f, mesh, in_specs, out_specs, axis):
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         axis_names=frozenset({axis}), check_vma=False)
+
+
+def foopar_matmul_row(x: jax.Array, w: jax.Array, *, mesh, axis: str = "model",
+                      preferred_element_type=jnp.float32) -> jax.Array:
+    """Row-parallel: x (..., k) with k sharded over ``axis``; w (k, n) sharded
+    on k.  FooPar:  zipWithD (·) then reduceD (+)  — one all-reduce of the
+    (…, n) output: Θ(log p (t_s + t_w m)) latency, 2m(p-1)/p bandwidth."""
+
+    def body(xl, wl):
+        partial_ = DSeq(xl, axis).zipWithD(
+            DSeq(wl, axis),
+            lambda a, b: jnp.matmul(a, b, preferred_element_type=preferred_element_type),
+        )
+        return partial_.reduceD("sum")
+
+    nx = x.ndim
+    return _manual(body, mesh,
+                   in_specs=(P(*([None] * (nx - 1) + [axis])), P(axis, None)),
+                   out_specs=P(*([None] * nx)), axis=axis)(x, w)
+
+
+def foopar_matmul_col(x: jax.Array, w: jax.Array, *, mesh, axis: str = "model",
+                      preferred_element_type=jnp.float32) -> jax.Array:
+    """Column-parallel: w (k, n) sharded on n; output (…, n) sharded on n.
+    FooPar: pure mapD — zero communication."""
+
+    def body(xl, wl):
+        return DSeq((xl, wl), axis).mapD(
+            lambda t: jnp.matmul(t[0], t[1], preferred_element_type=preferred_element_type)
+        ).local
+
+    nx = x.ndim
+    return _manual(body, mesh,
+                   in_specs=(P(*([None] * nx)), P(None, axis)),
+                   out_specs=P(*([None] * (nx - 1) + [axis])), axis=axis)(x, w)
+
+
+def choose_tp_strategy(m_tokens: int, k: int, n: int, p: int,
+                       bytes_per_elt: int = 2) -> Literal["row", "col"]:
+    """Rank row- vs column-parallel with the Table-1 cost model.
+
+    row: all-reduce of (m_tokens, n) output; col: none now, but the activation
+    stays sharded (cost deferred to the consumer — modeled as an eventual
+    all-gather of the same size).  The decision reduces to whether the
+    *consumer* contracts over n (then 'col' is free) — callers pass the
+    effective sizes; ties break to 'col' (lazier)."""
+    m_bytes = m_tokens * n * bytes_per_elt
+    row_cost = costmodel.t_all_reduce(m_bytes, p)
+    col_cost = costmodel.t_all_gather(m_bytes / p, p)
+    return "row" if row_cost < col_cost else "col"
+
+
+def dns_matmul_2d(x: jax.Array, w: jax.Array, *, mesh,
+                  contract_axis: str = "data", out_axis: str = "model",
+                  preferred_element_type=jnp.float32) -> jax.Array:
+    """2.5D/DNS-flavored matmul for pjit programs (beyond paper): contract
+    dimension sharded over ``contract_axis`` *and* output sharded over
+    ``out_axis`` — the LM-mesh projection of the paper's 3D decomposition
+    (the q³ grid's z-axis ≙ contract_axis, x/y ≙ batch × out).  Reduces the
+    all-reduce size by p_out compared to plain row-parallel."""
+
+    def body(xl, wl):
+        part = jnp.matmul(xl, wl, preferred_element_type=preferred_element_type)
+        return jax.lax.psum(part, contract_axis)
+
+    nx = x.ndim
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(*([None] * (nx - 1) + [contract_axis])), P(contract_axis, out_axis)),
+        out_specs=P(*([None] * (nx - 1) + [out_axis])),
+        axis_names=frozenset({contract_axis, out_axis}), check_vma=False,
+    )(x, w)

@@ -1,0 +1,100 @@
+"""Deterministic synthetic token pipeline.
+
+Every batch is a pure function of (seed, step) — this is what makes
+checkpoint/restart bitwise reproducible (runtime/recovery.py): after a
+restart at step k the stream continues exactly where it left off, and after
+an *elastic* resize the global batch content is unchanged because sharding is
+derived from global indices, not host-local counters.
+
+Per-host sharding: each process materializes only its slice of the global
+batch (process_index/process_count), placed onto its addressable devices;
+``jax.make_array_from_process_local_data`` assembles the global array.
+Single-host (this container) degenerates to the full batch.
+
+A background thread prefetches ``prefetch`` batches ahead.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclass
+class SyntheticTokens:
+    """Markov-ish synthetic LM data: deterministic, seeded, non-trivial
+    (next-token structure exists, so loss decreases measurably)."""
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int, lo: int | None = None, hi: int | None = None) -> np.ndarray:
+        lo = 0 if lo is None else lo
+        hi = self.global_batch if hi is None else hi
+        rng = np.random.Generator(np.random.Philox(key=self.seed + (step << 20)))
+        # draw per-row generators keyed by global row index => elastic-safe
+        rows = []
+        for r in range(lo, hi):
+            rr = np.random.Generator(np.random.Philox(key=(self.seed << 1) ^ (step << 20) ^ r))
+            base = rr.integers(0, self.vocab, size=self.seq_len // 2, dtype=np.int32)
+            # structure: every token repeated twice (learnable bigram rule)
+            row = np.repeat(base, 2)[: self.seq_len]
+            noise = rr.random(self.seq_len) < 0.1
+            row = np.where(noise, rr.integers(0, self.vocab, self.seq_len), row)
+            rows.append(row.astype(np.int32))
+        return np.stack(rows)
+
+
+def make_batch_iterator(cfg: ModelConfig, shape: ShapeConfig, *,
+                        seed: int = 0, start_step: int = 0,
+                        mesh: Optional[jax.sharding.Mesh] = None,
+                        batch_sharding=None, prefetch: int = 2,
+                        frames_dim: Optional[int] = None) -> Iterator[dict]:
+    """Yields {'tokens': (B, S)} (+ 'frames' for enc-dec) global arrays."""
+    ds = SyntheticTokens(cfg.vocab, shape.seq_len, shape.global_batch, seed)
+    n_proc = jax.process_count()
+    pidx = jax.process_index()
+    per_host = shape.global_batch // n_proc
+    lo, hi = pidx * per_host, (pidx + 1) * per_host
+
+    def produce(step: int) -> dict:
+        local = ds.batch_at(step, lo, hi)
+        if mesh is not None and batch_sharding is not None:
+            tokens = jax.make_array_from_process_local_data(batch_sharding, local)
+        else:
+            tokens = jnp.asarray(local)
+        out = {"tokens": tokens}
+        if cfg.enc_dec:
+            rng = np.random.Generator(np.random.Philox(key=seed ^ (step << 21)))
+            fr = rng.standard_normal((hi - lo, frames_dim or 1500, cfg.d_model),
+                                     dtype=np.float32)
+            out["frames"] = jnp.asarray(fr)
+        return out
+
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put(produce(step), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()

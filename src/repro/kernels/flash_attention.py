@@ -1,0 +1,120 @@
+"""FlashAttention-style Pallas kernel (online softmax), GQA + causal + SWA.
+
+TPU adaptation of the GPU algorithm: instead of warp-level tiling, the
+(bq, d) query tile and the f32 running statistics (m, l, acc) are pinned in
+VMEM scratch across the innermost kv-block grid dimension; each step stages a
+(bkv, d) K and V tile HBM→VMEM via BlockSpec and performs two MXU matmuls
+(S = Q Kᵀ, O += P V).  Fully-masked kv blocks are skipped with ``pl.when``
+(the TPU grid is sequential per core, so the skip saves real time, the
+analogue of the GPU early-exit).
+
+Layout: q (B, Hq, Lq, D); k, v (B, Hkv, Lk, D); queries are aligned to the
+END of the key sequence (prefill Lq == Lk, decode Lq == 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               kv_steps: int, bq: int, bkv: int, lq: int, lk: int,
+               scale: float, causal: bool, window: int | None):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions; queries end-aligned to the key sequence
+    q_lo = (lk - lq) + iq * bq            # first query position in this tile
+    k_lo = jk * bkv
+
+    # block-level skip: causal => newest key in block must be <= newest query
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + bq - 1
+    if window is not None:
+        live &= q_lo - (k_lo + bkv - 1) < window  # oldest key inside window
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bkv)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(jk == kv_steps - 1)
+    def _store():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked row -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           scale: float | None = None,
+                           bq: int = 256, bkv: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    bq = min(bq, lq)
+    bkv = min(bkv, lk)
+    assert lq % bq == 0 and lk % bkv == 0
+    kv_steps = lk // bkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, kv_steps=kv_steps, bq=bq, bkv=bkv, lq=lq, lk=lk,
+        scale=scale, causal=causal, window=window)
+
+    grid = (b, hq, lq // bq, kv_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, i, j, rep=rep: (bb, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, i, j, rep=rep: (bb, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

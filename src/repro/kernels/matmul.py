@@ -1,0 +1,56 @@
+"""Blocked MXU matmul Pallas kernel — the framework's JBLAS/MKL layer.
+
+Tiling: grid (M/bm, N/bn, K/bk); A tile (bm, bk) and B tile (bk, bn) staged
+HBM→VMEM by BlockSpec; f32 accumulator lives in a VMEM scratch across the K
+grid dimension (revisited innermost).  Block defaults are MXU-aligned
+(multiples of 128 on the matmul dims) and sized so the working set
+(bm·bk + bk·bn + bm·bn floats) fits comfortably in ~16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+                  bk: int = 512, out_dtype=jnp.float32,
+                  interpret: bool = False) -> jax.Array:
+    """C[m, n] = Σ_k A[m, k] B[k, n], MXU-tiled, f32 VMEM accumulator."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

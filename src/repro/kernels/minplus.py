@@ -1,0 +1,68 @@
+"""(min, +) matrix-product Pallas kernel — the blocked Floyd-Warshall hot spot.
+
+C[i, j] = min_k A[i, k] + B[k, j].  Tropical semiring ⇒ no MXU; this is a VPU
+kernel, so the tiling objective is purely memory-hierarchy: stage (bm, bk) and
+(bk, bn) tiles in VMEM, keep a running-min accumulator in VMEM, and walk k
+innermost.  The inner product is unrolled over the bk dimension in steps of
+``uk`` rank-1 (min, +) updates to bound VREG pressure (a full (bm, bk, bn)
+broadcast would not fit in VMEM for useful block sizes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, uk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+
+    a = a_ref[...].astype(jnp.float32)  # (bm, bk)
+    b = b_ref[...].astype(jnp.float32)  # (bk, bn)
+    bk = a.shape[1]
+
+    def body(s, acc):
+        # (bm, uk, 1) + (1, uk, bn) -> min over uk
+        a_sl = lax.dynamic_slice_in_dim(a, s * uk, uk, axis=1)
+        b_sl = lax.dynamic_slice_in_dim(b, s * uk, uk, axis=0)
+        upd = jnp.min(a_sl[:, :, None] + b_sl[None, :, :], axis=1)
+        return jnp.minimum(acc, upd)
+
+    acc_ref[...] = lax.fori_loop(0, bk // uk, body, acc_ref[...])
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def minplus_pallas(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
+                   bk: int = 256, uk: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """C = A ⊗ B over the (min, +) semiring, VMEM-tiled."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    uk = min(uk, bk)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % uk == 0
+    k_steps = k // bk
+
+    kernel = functools.partial(_minplus_kernel, k_steps=k_steps, uk=uk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

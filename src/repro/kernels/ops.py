@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels, with CPU-interpret fallback.
+
+On the CPU container the kernels execute under ``interpret=True`` (Python
+evaluation of the kernel body — the correctness target); on TPU the same
+calls compile to Mosaic.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+from .minplus import minplus_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, *, bm=256, bn=256, bk=512, out_dtype=jnp.float32,
+           interpret: bool | None = None):
+    return matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                         interpret=_auto_interpret(interpret))
+
+
+def minplus(a, b, *, bm=256, bn=256, bk=256, uk=8, interpret: bool | None = None):
+    return minplus_pallas(a, b, bm=bm, bn=bn, bk=bk, uk=uk,
+                          interpret=_auto_interpret(interpret))
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    bq=256, bkv=512, interpret: bool | None = None):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, bq=bq, bkv=bkv,
+                                  interpret=_auto_interpret(interpret))

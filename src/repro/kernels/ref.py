@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These define the semantics the kernels must match (assert_allclose in
+tests/test_kernels.py across shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array, *, out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def minplus(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(min, +) matrix product: C[i,j] = min_k A[i,k] + B[k,j]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size (keys j with i_abs - j >= window masked);
+    query position i is aligned to the *end* of the key sequence (prefill:
+    Lq == Lk; decode: Lq == 1 attending to a cache of Lk).
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s *= scale if scale is not None else (1.0 / jnp.sqrt(d))
+    lk = k.shape[2]
+    qpos = jnp.arange(lq) + (lk - lq)          # query absolute positions
+    kpos = jnp.arange(lk)
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+
+The first two lines above MUST precede any jax import: jax locks the device
+count at first init, and only the dry-run wants 512 host devices.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import SHAPES, ParallelConfig, TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.parallel import steps as S
+from repro.parallel.sharding import param_specs, opt_specs, to_shardings
+from repro.core import costmodel
+
+
+def default_pcfg(arch: str, kind: str) -> ParallelConfig:
+    """Per-arch parallel defaults (see EXPERIMENTS.md §Dry-run for rationale).
+
+    Train: FSDP always (optimizer states dominate); ≥100B models get bf16
+    optimizer states + pod-extended FSDP to fit 16 GiB chips.
+
+    Serve (prefill/decode): params are bf16 and kept *TP-resident* (no FSDP
+    gathers per token) whenever total×2B/16 shards fits comfortably; only the
+    ≥100B configs keep FSDP (their per-step gather amortizes over the batch)."""
+    from repro import configs as _c
+    big = arch in ("llama3-405b", "kimi-k2-1t-a32b", "command-r-plus-104b",
+                   "mixtral-8x22b", "chameleon-34b")
+    if kind == "train":
+        return ParallelConfig(
+            fsdp_params=True,
+            fsdp_pod=big,
+            opt_state_dtype="bfloat16" if big else "float32",
+            remat="full",
+        )
+    total = _c.get(arch).param_counts()["total"]
+    fits_tp = total * 2 / 16 < 12 * 2**30
+    return ParallelConfig(fsdp_params=not fits_tp, fsdp_pod=not fits_tp,
+                          remat="none")
+
+
+def _cell_cfg(arch: str, kind: str):
+    """Model config for a cell: serving runs bf16 params (inference norm)."""
+    cfg = configs.get(arch)
+    if kind != "train":
+        cfg = cfg.replace(param_dtype="bfloat16")
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, mesh, pcfg=None, cfg_override=None):
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or _cell_cfg(arch, shape.kind)
+    pcfg = pcfg or default_pcfg(arch, shape.kind)
+    tcfg = TrainConfig()
+    cell = build_cell(cfg, shape, mesh, pcfg)
+    ctx = cell.ctx
+
+    if shape.kind == "train":
+        state = S.abstract_train_state(cfg, pcfg)
+        state_sh = S.train_state_shardings(cfg, pcfg, ctx, state)
+        fn = S.make_train_step(cfg, pcfg, tcfg, ctx)
+        jitted = jax.jit(fn,
+                         in_shardings=(state_sh,) + cell.in_shardings,
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, *cell.abstract_args)
+    elif shape.kind == "prefill":
+        params = jax.eval_shape(partial(_init_params, cfg=cfg))
+        psh = to_shardings(param_specs(params, cfg, ctx), mesh)
+        fn = S.make_prefill_step(cfg, pcfg, ctx)
+        jitted = jax.jit(fn, in_shardings=(psh,) + cell.in_shardings)
+        lowered = jitted.lower(params, *cell.abstract_args)
+    else:  # decode
+        params = jax.eval_shape(partial(_init_params, cfg=cfg))
+        psh = to_shardings(param_specs(params, cfg, ctx), mesh)
+        fn = S.make_decode_step(cfg, pcfg, ctx)
+        # donate the cache (args: params, token, cache, pos[, enc_out])
+        jitted = jax.jit(fn, in_shardings=(psh,) + cell.in_shardings,
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params, *cell.abstract_args)
+    return lowered, cell
+
+
+def _init_params(cfg):
+    from repro.models import transformer as T
+    from repro.models import encdec as E
+    init = E.init if cfg.enc_dec else T.init
+    return init(jax.random.PRNGKey(0), cfg)
+
+
+def _inner_unrolled(cfg):
+    """cfg with the chunk-scan unroll doubled (SSD/mLSTM inner loop probe)."""
+    import dataclasses
+    kw = {}
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, unroll=2)
+    if cfg.xlstm is not None:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, unroll=2)
+    return cfg.replace(**kw) if kw else None
+
+
+def _probe(arch, shape_name, mesh, scan_unroll, inner: bool):
+    """One lower+compile with probe unrolls; returns raw analysis."""
+    shape = SHAPES[shape_name]
+    cfg = _cell_cfg(arch, shape.kind)
+    pcfg = default_pcfg(arch, shape.kind)
+    import dataclasses
+    pcfg = dataclasses.replace(pcfg, scan_unroll=scan_unroll)
+    cfg2 = _inner_unrolled(cfg) if inner else cfg
+    pcfg, cfg2 = _apply_overrides(pcfg, cfg2)
+    lowered, cell = lower_cell(arch, shape_name, mesh, pcfg=pcfg,
+                               cfg_override=cfg2)
+    compiled = lowered.compile()
+    return analyze_compiled(compiled, mesh.size), cell, compiled
+
+
+def _moe_ragged_overcount(cfg, shape, ctx, pcfg) -> float:
+    """Per-device FLOPs that XLA's cost analysis over-counts for ragged_dot.
+
+    CPU lowering (and cost analysis) treats ragged_dot as a DENSE dot over
+    every expert group (verified: dense count for a (C,d)x(E,d,ff) ragged
+    dot); on TPU Mosaic it executes ~C rows once.  We subtract the analytic
+    overcount (E_groups−1)·2·C·d·ff per ragged_dot so the compute roofline
+    term reflects the machine the mesh targets.  Recorded separately in the
+    cell JSON (``flops_moe_overcount``)."""
+    if cfg.moe is None or "attn_moe" not in cfg.block_pattern:
+        return 0.0
+    import math
+    e = cfg.moe
+    d, ff = cfg.d_model, e.d_ff_expert
+    ep = ctx.model_size
+    bs = 1
+    for a in ctx.batch_axes:
+        bs *= ctx.mesh.shape[a]
+    t_loc = (shape.global_batch // bs) * (shape.seq_len if shape.kind != "decode" else 1)
+    use_ep = e.n_experts % ep == 0 and e.n_experts >= ep
+    if pcfg.moe_a2a_ep and "data" in ctx.batch_axes:
+        dp = ctx.mesh.shape["data"]
+        e_groups = e.n_experts // dp
+        cap = dp * max(8, int(math.ceil(t_loc * e.top_k / dp * e.capacity_factor)))
+        over_per_rd = 2.0 * cap * d * (ff / ep) * (e_groups - 1)
+    elif use_ep:
+        e_groups = e.n_experts // ep
+        cap = max(8, min(int(math.ceil(t_loc * e.top_k / ep * e.capacity_factor)),
+                         t_loc * e.top_k))
+        over_per_rd = 2.0 * cap * d * ff * (e_groups - 1)
+    else:
+        e_groups = e.n_experts
+        cap = t_loc * e.top_k
+        over_per_rd = 2.0 * cap * d * (ff / ep) * (e_groups - 1)
+    passes = 4.0 if shape.kind == "train" else 1.0  # fwd+bwd(2)+remat
+    n_moe = cfg.block_pattern.count("attn_moe") * cfg.n_periods
+    return over_per_rd * 3 * passes * n_moe
+
+
+HILLCLIMB_OVERRIDES = {"pcfg": {}, "cfg": {}}  # set by --hc-* CLI flags
+
+
+def _apply_overrides(pcfg, cfg):
+    import dataclasses
+    if HILLCLIMB_OVERRIDES["pcfg"]:
+        pcfg = dataclasses.replace(pcfg, **HILLCLIMB_OVERRIDES["pcfg"])
+    for k, v in HILLCLIMB_OVERRIDES["cfg"].items():
+        if k == "mm_bf16":
+            if cfg.ssm is not None:
+                cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm, mm_bf16=v))
+            if cfg.xlstm is not None:
+                cfg = cfg.replace(xlstm=dataclasses.replace(cfg.xlstm, mm_bf16=v))
+        else:
+            cfg = cfg.replace(**{k: v})
+    return pcfg, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             no_probes: bool = False):
+    """Lower+compile with XLA's scan-body-counted-once quirk corrected:
+    cost_analysis counts a while-loop body once regardless of trip count, so
+    we probe with layer-scan unroll 1 and 2 (and inner chunk-scan unroll for
+    SSD/mLSTM archs) and solve  measured(u_o, u_i) = A + u_o·B + u_o·u_i·C
+    for the true  A + P·B + P·C_i·C  (P = layer-scan trips, C_i = chunk-scan
+    trips).  sLSTM's per-token scan is left uncorrected (elementwise,
+    negligible flops; noted in EXPERIMENTS.md)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n = mesh.size
+    shape = SHAPES[shape_name]
+    cfg = _cell_cfg(arch, shape.kind)
+
+    t0 = time.time()
+    rec, cell, compiled = _probe(arch, shape_name, mesh, 1, False)
+    t1 = time.time()
+    if no_probes:
+        p21 = rec
+    else:
+        p21, _, _ = _probe(arch, shape_name, mesh, 2, False)
+
+    trips = cfg.n_layers if cfg.enc_dec else cfg.n_periods
+    has_chunks = (cfg.ssm is not None or cfg.xlstm is not None) \
+        and shape.kind != "decode"
+    chunk = (cfg.ssm.chunk if cfg.ssm else cfg.xlstm.chunk) if has_chunks else 1
+    inner_trips = max(1, shape.seq_len // chunk) if has_chunks else 1
+
+    if has_chunks and inner_trips > 1 and not no_probes:
+        p22, _, _ = _probe(arch, shape_name, mesh, 2, True)
+    else:
+        p22 = None
+
+    def corrected(metric):
+        m11 = metric(rec)
+        m21 = metric(p21)
+        if p22 is not None:
+            m22 = metric(p22)
+            c = m22 - m21
+            b = (m21 - m11) - c
+            a = m11 - b - c
+            out = a + trips * b + trips * inner_trips * c
+        else:
+            b = m21 - m11
+            a = m11 - b
+            out = a + trips * b
+        # physical floor: the true total can't be below the once-counted
+        # measurement (probe noise from fusion differences can go negative)
+        return max(out, m11)
+
+    flops_dev = corrected(lambda r: r["flops_per_device"])
+    pcfg_eff, _ = _apply_overrides(default_pcfg(arch, shape.kind), cfg)
+    over_dev = _moe_ragged_overcount(cfg, shape, cell.ctx, pcfg_eff)
+    flops_dev = max(flops_dev - over_dev, 0.0)
+    bytes_dev = corrected(lambda r: r["bytes_per_device"])
+    wire_dev = corrected(lambda r: r["collectives"]["wire_bytes"])
+    coll_per_op = {
+        k: {kk: corrected(lambda r, k=k, kk=kk: r["collectives"]["per_op"][k][kk])
+            for kk in ("result_bytes", "wire_bytes")}
+        | {"count_in_text": rec["collectives"]["per_op"][k]["count"]}
+        for k in rec["collectives"]["per_op"]
+    }
+    t2 = time.time()
+
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        model_flops = costmodel.model_flops_train(pc["active"], tokens)
+    else:
+        model_flops = 2.0 * pc["active"] * tokens
+    terms = costmodel.roofline_terms(flops_dev * n, bytes_dev * n, wire_dev * n, n)
+    rec.update({
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "flops_per_device": flops_dev,
+        "hlo_flops_global": flops_dev * n,
+        "bytes_per_device": bytes_dev,
+        "collectives_corrected": {"wire_bytes": wire_dev, "per_op": coll_per_op},
+        "scan_trips": trips, "chunk_trips": inner_trips,
+        "flops_moe_overcount_per_device": over_dev,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / max(flops_dev * n, 1.0),
+        "roofline": terms,
+        "compile_s": t1 - t0, "probe_s": t2 - t1,
+        "batch_axes": list(cell.ctx.batch_axes),
+    })
+    if verbose:
+        mem = rec["memory"]
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] "
+              f"compile {rec['compile_s']:.1f}s+{rec['probe_s']:.1f}s  "
+              f"mem/dev args={mem['argument_bytes']/2**30:.2f}GiB "
+              f"temp={mem['temp_bytes']/2**30:.2f}GiB  "
+              f"flops/dev={rec['flops_per_device']:.3e}  "
+              f"useful={rec['useful_flops_ratio']:.2f}  "
+              f"dominant={terms['dominant']} ({terms['bound_s']*1e3:.2f} ms)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis(corrected): flops/dev=%.4e bytes/dev=%.4e wire/dev=%.4e" %
+              (rec["flops_per_device"], rec["bytes_per_device"],
+               rec["collectives_corrected"]["wire_bytes"]))
+        print("  collectives:", json.dumps(rec["collectives_corrected"]["per_op"]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    # §Perf hillclimb knobs
+    ap.add_argument("--hc-seq-parallel", action="store_true")
+    ap.add_argument("--hc-a2a-ep", action="store_true")
+    ap.add_argument("--hc-engine-replicate", action="store_true")
+    ap.add_argument("--hc-mm-bf16", action="store_true")
+    ap.add_argument("--hc-remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--hc-logit-chunk", type=int, default=None)
+    ap.add_argument("--hc-no-fsdp", action="store_true")
+    ap.add_argument("--hc-master-bf16", action="store_true")
+    ap.add_argument("--hc-grad-barrier", action="store_true")
+    ap.add_argument("--hc-manual-attention", action="store_true")
+    ap.add_argument("--hc-dp-over-model", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="single compile per cell (multi-pod shard-proof "
+                         "pass; roofline numbers uncorrected)")
+    args = ap.parse_args()
+    if args.hc_seq_parallel:
+        HILLCLIMB_OVERRIDES["pcfg"]["sequence_parallel"] = True
+    if args.hc_a2a_ep:
+        HILLCLIMB_OVERRIDES["pcfg"]["moe_a2a_ep"] = True
+    if args.hc_engine_replicate:
+        HILLCLIMB_OVERRIDES["pcfg"]["engine_replicate"] = True
+    if args.hc_remat:
+        HILLCLIMB_OVERRIDES["pcfg"]["remat"] = args.hc_remat
+    if args.hc_logit_chunk:
+        HILLCLIMB_OVERRIDES["pcfg"]["logit_chunk"] = args.hc_logit_chunk
+    if args.hc_no_fsdp:
+        HILLCLIMB_OVERRIDES["pcfg"]["fsdp_params"] = False
+        HILLCLIMB_OVERRIDES["pcfg"]["fsdp_pod"] = False
+    if args.hc_mm_bf16:
+        HILLCLIMB_OVERRIDES["cfg"]["mm_bf16"] = True
+    if args.hc_master_bf16:
+        HILLCLIMB_OVERRIDES["pcfg"]["master_weights"] = True
+    if args.hc_grad_barrier:
+        HILLCLIMB_OVERRIDES["pcfg"]["grad_barrier"] = True
+    if args.hc_manual_attention:
+        HILLCLIMB_OVERRIDES["pcfg"]["manual_attention"] = True
+    if args.hc_dp_over_model:
+        HILLCLIMB_OVERRIDES["pcfg"]["dp_over_model"] = True
+
+    results = []
+    if args.all:
+        todo = [(a, s, sk) for (a, s, sk) in configs.cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape, False)]
+
+    failures = []
+    for arch, shape_name, skip in todo:
+        if skip:
+            results.append({"arch": arch, "shape": shape_name, "skipped": True,
+                            "reason": "full-attention arch; long_500k requires "
+                                      "sub-quadratic attention (DESIGN.md §4)"})
+            print(f"[{arch} × {shape_name}] SKIP (full attention)")
+            continue
+        try:
+            results.append(run_cell(arch, shape_name, args.multi_pod,
+                                    no_probes=args.no_probes))
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape_name, str(e)))
+            results.append({"arch": arch, "shape": shape_name, "error": str(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:", *[f"{a}×{s}: {e[:200]}" for a, s, e in failures],
+              sep="\n")
+        sys.exit(1)
+    print(f"\nall {len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

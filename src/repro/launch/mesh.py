@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single pod: 16×16 = 256 chips, axes (data, model).  Multi-pod:
+2×16×16 = 512 chips, axes (pod, data, model); ``pod`` maps to the DCI link
+class in the cost model.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,142 @@
+"""ShapeDtypeStruct input stand-ins + sharding trees for every
+(architecture × input shape) cell — the dry-run's data layer.
+
+Nothing here allocates: abstract params via ``jax.eval_shape``, inputs as
+``ShapeDtypeStruct``.  Modality frontends are stubs per the assignment:
+whisper gets (B, 1500, d_model) frame embeddings, chameleon gets VQ token
+ids (they live in the text vocab).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.models.encdec import ENC_LEN
+from repro.models.moe import MeshCtx
+from repro.parallel.sharding import make_ctx, param_specs, to_shardings
+
+Pytree = Any
+
+
+def make_cell_ctx(mesh: Mesh, pcfg: ParallelConfig, global_batch: int) -> MeshCtx:
+    """MeshCtx whose batch axes are restricted to those that divide the
+    global batch (B=1 long-decode ⇒ batch replicated, model axis carries
+    all parallelism — see EXPERIMENTS §Roofline discussion)."""
+    ctx = make_ctx(mesh, pcfg)
+    axes: Tuple[str, ...] = ()
+    prod = 1
+    for a in ctx.batch_axes:
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            axes += (a,)
+            prod *= mesh.shape[a]
+    return MeshCtx(mesh=mesh, batch_axes=axes, model_axis=ctx.model_axis,
+                   fsdp_axes=ctx.fsdp_axes, moe_a2a_ep=ctx.moe_a2a_ep,
+                   engine_replicate=ctx.engine_replicate,
+                   seq_parallel=ctx.seq_parallel, foopar_tp=ctx.foopar_tp,
+                   manual_attention=ctx.manual_attention,
+                   dp_over_model=ctx.dp_over_model)
+
+
+def _bspec(ctx: MeshCtx, ndim: int, batch_dim: int = 0) -> P:
+    parts: list = [None] * ndim
+    parts[batch_dim] = ctx.batch_axes if ctx.batch_axes else None
+    return P(*parts)
+
+
+def _div(n: int, size: int, axis: str) -> Optional[str]:
+    return axis if n % size == 0 else None
+
+
+def cache_specs(cfg: ModelConfig, ctx: MeshCtx, cache: Pytree) -> Pytree:
+    """PartitionSpec tree for a decode cache pytree: batch over batch axes,
+    heads/channels over 'model' where divisible."""
+    msz = ctx.model_size
+    model = ctx.model_axis
+
+    def leaf(path, x):
+        # shapes: (periods, B, ...) — dim1 batch
+        parts: list = [None] * x.ndim
+        if x.ndim >= 2:
+            parts[1] = ctx.batch_axes if ctx.batch_axes else None
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if "attn" in names or "shared_attn" in names:
+            # (periods, B, L, Hkv, hd): cache LENGTH over model (heads rarely
+            # divide TP under GQA; decode attention shards the L dim)
+            parts[2] = _div(x.shape[2], msz, model)
+        elif "mamba" in names and "conv" in names:
+            parts[3] = _div(x.shape[3], msz, model)       # channels
+        elif "mamba" in names and "ssm" in names:
+            parts[2] = _div(x.shape[2], msz, model)       # heads
+        elif "mlstm" in names:
+            parts[2] = _div(x.shape[2], msz, model)
+        elif "slstm" in names:
+            parts[2] = _div(x.shape[2], msz, model)       # channels (d)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+@dataclass
+class Cell:
+    """Everything the dry-run needs for one (arch × shape × mesh) cell."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    ctx: MeshCtx
+    abstract_args: tuple          # ShapeDtypeStructs for the step fn
+    in_shardings: tuple
+    kind: str                     # train | prefill | decode
+
+
+def _abs(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    init = E.init_cache if cfg.enc_dec else T.init_cache
+    return jax.eval_shape(lambda: init(cfg, batch, max_len))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               pcfg: ParallelConfig) -> Cell:
+    """Abstract inputs + shardings for one cell (state excluded — the caller
+    pairs these with abstract_train_state / abstract params)."""
+    ctx = make_cell_ctx(mesh, pcfg, shape.global_batch)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        batch = {"tokens": _abs((b, s), jnp.int32)}
+        bsh = {"tokens": NamedSharding(mesh, _bspec(ctx, 2))}
+        if cfg.enc_dec:
+            batch["frames"] = _abs((b, ENC_LEN, cfg.d_model), jnp.float32)
+            bsh["frames"] = NamedSharding(mesh, _bspec(ctx, 3))
+        return Cell(cfg, shape, ctx, (batch,), (bsh,), "train")
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _abs((b, s), jnp.int32)}
+        bsh = {"tokens": NamedSharding(mesh, _bspec(ctx, 2))}
+        if cfg.enc_dec:
+            batch["frames"] = _abs((b, ENC_LEN, cfg.d_model), jnp.float32)
+            bsh["frames"] = NamedSharding(mesh, _bspec(ctx, 3))
+        return Cell(cfg, shape, ctx, (batch,), (bsh,), "prefill")
+
+    # decode: one new token against a seq_len cache
+    cache = abstract_cache(cfg, b, s)
+    csh = to_shardings(cache_specs(cfg, ctx, cache), mesh)
+    token = _abs((b,), jnp.int32)
+    tsh = NamedSharding(mesh, _bspec(ctx, 1))
+    pos = _abs((), jnp.int32)
+    psh = NamedSharding(mesh, P())
+    args = [token, cache, pos]
+    shs = [tsh, csh, psh]
+    if cfg.enc_dec:
+        args.append(_abs((b, ENC_LEN, cfg.d_model), jnp.float32))
+        shs.append(NamedSharding(mesh, _bspec(ctx, 3)))
+    return Cell(cfg, shape, ctx, tuple(args), tuple(shs), "decode")

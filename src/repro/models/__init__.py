@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX modules (pytree params + init/apply functions)."""

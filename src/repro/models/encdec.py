@@ -1,0 +1,154 @@
+"""Whisper-style encoder-decoder backbone (conv/audio frontend is a STUB:
+``input_specs`` supplies precomputed frame embeddings, per the assignment).
+
+Encoder: non-causal self-attention + GELU MLP over frame embeddings.
+Decoder: causal self-attention (KV-cached for decode) + cross-attention to
+the encoder output + GELU MLP.  LayerNorm, learned positional embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+ENC_LEN = 1500  # whisper 30 s @ 50 Hz after the (stubbed) conv frontend
+
+
+def _xattn_init(rng, cfg):
+    return L.attention_init(rng, cfg)
+
+
+def init(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 8)
+    n = cfg.n_layers
+
+    def enc_layer(r):
+        kk = jax.random.split(r, 2)
+        return {"ln1": L.norm_init(cfg.d_model, cfg),
+                "attn": L.attention_init(kk[0], cfg),
+                "ln2": L.norm_init(cfg.d_model, cfg),
+                "mlp": L.mlp_init(kk[1], cfg)}
+
+    def dec_layer(r):
+        kk = jax.random.split(r, 3)
+        return {"ln1": L.norm_init(cfg.d_model, cfg),
+                "attn": L.attention_init(kk[0], cfg),
+                "lnx": L.norm_init(cfg.d_model, cfg),
+                "xattn": _xattn_init(kk[1], cfg),
+                "ln2": L.norm_init(cfg.d_model, cfg),
+                "mlp": L.mlp_init(kk[2], cfg)}
+
+    enc_rngs = jax.random.split(ks[0], n)
+    dec_rngs = jax.random.split(ks[1], n)
+    return {
+        "embed": L.embed_init(ks[2], cfg),
+        "enc_pos": jax.random.normal(ks[3], (ENC_LEN, cfg.d_model), jnp.float32) * 0.01,
+        "dec_pos": jax.random.normal(ks[4], (32768, cfg.d_model), jnp.float32) * 0.01,
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *[enc_layer(r) for r in enc_rngs]),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *[dec_layer(r) for r in dec_rngs]),
+        "enc_norm": L.norm_init(cfg.d_model, cfg),
+        "final_norm": L.norm_init(cfg.d_model, cfg),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig, *, remat="none",
+           ctx=None, unroll: int = 1) -> jax.Array:
+    """frames: (B, T_enc, d) stub frame embeddings."""
+    t = frames.shape[1]
+    h = frames.astype(L._dtype(cfg)) + params["enc_pos"][:t].astype(L._dtype(cfg))
+    positions = jnp.arange(t)
+
+    def layer_fn(h, p):
+        a, _ = L.attention(p["attn"], L.apply_norm(p["ln1"], h, cfg), positions,
+                           cfg, causal=False, ctx=ctx)
+        h = h + a
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+        h = _constrain(h, ctx)
+        return h, None
+
+    if remat != "none":
+        layer_fn = jax.checkpoint(layer_fn, prevent_cse=False)
+    h, _ = lax.scan(layer_fn, h, params["enc_layers"], unroll=unroll)
+    return L.apply_norm(params["enc_norm"], h, cfg)
+
+
+def decode_train(params: Params, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig, *, remat="none", ctx=None, unroll: int = 1) -> jax.Array:
+    """Teacher-forced decoder pass.  Returns logits (B, S, V) f32."""
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens, cfg) + params["dec_pos"][:s].astype(L._dtype(cfg))
+    positions = jnp.arange(s)
+
+    def layer_fn(h, p):
+        a, _ = L.attention(p["attn"], L.apply_norm(p["ln1"], h, cfg), positions, cfg,
+                           ctx=ctx)
+        h = h + a
+        xa, _ = L.attention(p["xattn"], L.apply_norm(p["lnx"], h, cfg), positions,
+                            cfg, xattn_kv=enc_out, ctx=ctx)
+        h = h + xa
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+        h = _constrain(h, ctx)
+        return h, None
+
+    if remat != "none":
+        layer_fn = jax.checkpoint(layer_fn, prevent_cse=False)
+    h, _ = lax.scan(layer_fn, h, params["dec_layers"], unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.logits(params["embed"], h, cfg)
+
+
+def forward(params: Params, frames: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, *, remat="none", ctx=None,
+            unroll: int = 1) -> Tuple[jax.Array, jax.Array]:
+    enc = encode(params, frames, cfg, remat=remat, ctx=ctx, unroll=unroll)
+    return decode_train(params, tokens, enc, cfg, remat=remat, ctx=ctx,
+                        unroll=unroll), jnp.zeros((), jnp.float32)
+
+
+def _constrain(h, ctx):
+    if ctx is None:
+        return h
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return lax.with_sharding_constraint(
+        h, NamedSharding(ctx.mesh, P(ctx.batch_axes if ctx.batch_axes else None,
+                                     None, None)))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    one = {"attn": (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def decode_step(params: Params, token: jax.Array, cache: Any, pos: jax.Array,
+                enc_out: jax.Array, cfg: ModelConfig, *, unroll: int = 1,
+                ctx=None) -> Tuple[jax.Array, Any]:
+    """One decoder step with cached self-attention; cross-attention recomputes
+    K/V from enc_out (B, T_enc, d)."""
+    b = token.shape[0]
+    h = L.embed(params["embed"], token[:, None], cfg) + \
+        jnp.take(params["dec_pos"], pos[None] if jnp.ndim(pos) == 0 else pos,
+                 axis=0).astype(L._dtype(cfg))
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+
+    def layer_fn(h, xs):
+        p, c = xs
+        a, c_new = L.attention(p["attn"], L.apply_norm(p["ln1"], h, cfg), positions,
+                               cfg, cache=c["attn"], cache_pos=pos, ctx=ctx)
+        h = h + a
+        xa, _ = L.attention(p["xattn"], L.apply_norm(p["lnx"], h, cfg), positions,
+                            cfg, xattn_kv=enc_out, ctx=ctx)
+        h = h + xa
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+        return h, {"attn": c_new}
+
+    h, new_cache = lax.scan(layer_fn, h, (params["dec_layers"], cache), unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return L.logits(params["embed"], h, cfg)[:, 0], new_cache

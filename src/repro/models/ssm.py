@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) blocks + the generic chunked linear-recurrence engine.
+
+TPU adaptation: the recurrence h_i = a_i h_{i-1} + g_i k_i ⊗ v_i is computed
+chunkwise (chunk L): intra-chunk contributions become dense (L×L) masked-decay
+matmuls (MXU work), inter-chunk state is carried by a short ``lax.scan`` over
+S/L chunks — the standard SSD reformulation, which replaces the GPU kernel's
+warp-parallel scan with matmuls the MXU actually likes.  The same engine runs
+mLSTM (xlstm.py) with q/k/v per head and a normalizer channel.
+
+Decode is the O(1) recurrence step on the carried state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense, dense_init, apply_norm, norm_init, _dtype, _pdtype
+
+Params = dict
+
+
+def _cstr(x, ctx, parts):
+    if ctx is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+def engine_specs(nh: int, dk: int, ctx):
+    """Pick the chunk-engine sharding: heads over 'model' when divisible
+    (Mamba2: 64 heads), else the q/k feature dim dk (mLSTM: 4 heads, dk 1024)
+    — partial scores combine with a psum per chunk."""
+    if ctx is None:
+        return None, None
+    if getattr(ctx, "engine_replicate", False) or \
+            getattr(ctx, "dp_over_model", False):
+        return None, None      # §Perf H7/C7: batch-shard only, no psums
+    msz = ctx.model_size
+    if nh % msz == 0:
+        return ctx.model_axis, None
+    if dk % msz == 0:
+        return None, ctx.model_axis
+    return None, None
+
+
+def chunked_linear_attention(q, k, v, log_a, gate, *, chunk: int,
+                             state0: Optional[jax.Array] = None,
+                             unroll: int = 1, ctx=None,
+                             h_shard=None, dk_shard=None, mm_bf16: bool = False
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """y[i] = Σ_{j≤i} exp(cum_i − cum_j) · gate_j · (q_i·k_j) · v_j  (+ carry).
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_a, gate: (B, S, H).
+    Returns (y (B, S, H, dv), final_state (B, H, dk, dv)).
+    All statistics in f32; the L×L intra-chunk matmuls in input dtype.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0
+    n_chunks = s // L
+    f32 = jnp.float32
+
+    qc = q.reshape(b, n_chunks, L, h, dk)
+    kc = k.reshape(b, n_chunks, L, h, dk)
+    vc = v.reshape(b, n_chunks, L, h, dv)
+    lac = log_a.reshape(b, n_chunks, L, h).astype(f32)
+    gc = gate.reshape(b, n_chunks, L, h).astype(f32)
+
+    B = ctx.batch_axes if (ctx and ctx.batch_axes) else None
+    qc = _cstr(qc, ctx, (B, None, None, h_shard, dk_shard))
+    kc = _cstr(kc, ctx, (B, None, None, h_shard, dk_shard))
+    vc = _cstr(vc, ctx, (B, None, None, h_shard, None))
+    lac = _cstr(lac, ctx, (B, None, None, h_shard))
+    gc = _cstr(gc, ctx, (B, None, None, h_shard))
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), f32)
+    state0 = _cstr(state0, ctx, (B, h_shard, dk_shard, None))
+
+    mm = jnp.bfloat16 if mm_bf16 else f32  # §Perf H8: MXU dtype for matmuls
+
+    def step(state, xs):
+        qq, kk, vv, la, g = xs          # (b, L, h, ...)
+        cum = jnp.cumsum(la, axis=1)    # (b, L, h) inclusive (f32 stats)
+        # intra-chunk: M[b,h,i,j] = (q_i·k_j) exp(cum_i - cum_j) g_j, j<=i
+        scores = jnp.einsum("bihd,bjhd->bhij", qq.astype(mm), kk.astype(mm),
+                            preferred_element_type=f32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]       # (b, i, j, h)
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        decay = jnp.where(mask, decay, -jnp.inf)              # mask BEFORE exp
+        m = scores * jnp.exp(decay).transpose(0, 3, 1, 2) * g.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhv->bihv", m.astype(mm), vv.astype(mm),
+                             preferred_element_type=f32)
+        # inter-chunk: y_inter[i] = exp(cum_i) q_i · S_prev
+        y_inter = jnp.einsum("bihd,bhdv->bihv", qq.astype(f32), state) \
+            * jnp.exp(cum)[..., None]
+        # state update: S = exp(cum_L) S + Σ_j exp(cum_L - cum_j) g_j k_j ⊗ v_j
+        last = cum[:, -1:, :]                                  # (b, 1, h)
+        w = jnp.exp(last - cum) * g                            # (b, L, h)
+        s_new = state * jnp.exp(last[:, 0])[:, :, None, None]
+        s_new = s_new + jnp.einsum("bjhd,bjhv->bhdv",
+                                   (kk.astype(f32) * w[..., None]).astype(mm),
+                                   vv.astype(mm), preferred_element_type=f32)
+        return s_new, y_intra + y_inter
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, lac, gc))
+    state, ys = lax.scan(step, state0, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv)
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(state, q, k, v, log_a, gate):
+    """One decode step.  state: (B, H, dk, dv); q,k: (B,H,dk); v: (B,H,dv);
+    log_a, gate: (B,H).  Returns (y (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[:, :, None, None]
+    upd = jnp.einsum("bhd,bhv->bhdv", k.astype(f32) * gate.astype(f32)[..., None],
+                     v.astype(f32))
+    state = state * a + upd
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba2_init(rng, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    ks = jax.random.split(rng, 4)
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * s.d_state + nh, cfg),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_ch), _pdtype(cfg))
+        / math.sqrt(s.conv_width),
+        "A_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.13
+        "norm": norm_init(d_in, cfg),
+        "out_proj": dense_init(ks[2], d_in, d, cfg),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 cache: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv.  x: (B, S, C); w: (W, C).
+    Decode (S==1): ``cache`` is the last W-1 inputs, rolled."""
+    wlen = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)        # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        return y[:, None, :].astype(x.dtype), window[:, 1:, :]
+    pad = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # (B, S, W, C) windows via stacked slices (W is tiny, e.g. 4)
+    y = sum(xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+            for i in range(wlen))
+    return y.astype(x.dtype), None
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 cache: Optional[dict] = None, ctx=None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d) → (B, S, d).  cache (decode): {'conv': (B,W-1,C), 'ssm': (B,H,dk,dv)}."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    b, seq, _ = x.shape
+
+    zxbcdt = dense(x, p["in_proj"], cfg)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * s.d_state], axis=-1)
+
+    new_cache = {}
+    conv_cache = cache.get("conv") if cache is not None else None
+    xbc, conv_new = _causal_conv(xbc, p["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    if cache is not None:
+        new_cache["conv"] = conv_new
+
+    xh = xbc[..., :d_in].reshape(b, seq, nh, s.head_dim)
+    bmat = xbc[..., d_in:d_in + s.d_state]                   # (B,S,dk) shared heads
+    cmat = xbc[..., d_in + s.d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    log_a = -jnp.exp(p["A_log"]) * dt                                 # (B,S,nh)
+
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, seq, nh, s.d_state))
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, seq, nh, s.d_state))
+
+    if cache is not None:
+        y, ssm_new = linear_attention_step(cache["ssm"], q[:, 0], k[:, 0],
+                                           xh[:, 0], log_a[:, 0], dt[:, 0])
+        y = y[:, None]
+        new_cache["ssm"] = ssm_new
+    else:
+        hs_, dks_ = engine_specs(nh, s.d_state, ctx)
+        y, _ = chunked_linear_attention(q, k, xh, log_a, dt, chunk=s.chunk,
+                                        unroll=s.unroll, ctx=ctx,
+                                        h_shard=hs_, dk_shard=dks_,
+                                        mm_bf16=s.mm_bf16)
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, seq, d_in).astype(_dtype(cfg))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = apply_norm(p["norm"], y, cfg)
+    out = dense(y, p["out_proj"], cfg)
+    return out, (new_cache if cache is not None else None)

@@ -1,0 +1,148 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar memory).
+
+mLSTM is run through the same chunked linear-recurrence engine as Mamba2
+(ssm.py) — it is exponential-gated linear attention with a normalizer
+channel: state S = Σ_j (Π f) i_j k_j ⊗ [v_j, 1], output
+h = (q·S)[:dv] / max(|q·S|[dv], 1).  Gating simplified to sigmoid i/f gates
+(log-sigmoid decays), which keeps the recurrence stable without the paper's
+m-stabilizer; noted in DESIGN.md §7.
+
+sLSTM keeps per-channel scalar state with exponential gating + stabilizer and
+runs as a true sequential ``lax.scan`` over time (the paper's inherently
+sequential part; cheap — elementwise per step).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense, dense_init, apply_norm, norm_init, _dtype, _pdtype
+from repro.models.ssm import (chunked_linear_attention, linear_attention_step,
+                              engine_specs)
+
+Params = dict
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = int(cfg.xlstm.proj_factor * d)
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return d, d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, cfg: ModelConfig) -> Params:
+    d, d_in, nh, hd = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_in, cfg),     # x and gate z
+        "wq": dense_init(ks[1], d_in, d_in, cfg),
+        "wk": dense_init(ks[2], d_in, d_in, cfg),
+        "wv": dense_init(ks[3], d_in, d_in, cfg),
+        "w_gates": dense_init(ks[4], d_in, 2 * nh, cfg),    # i, f per head
+        "norm": norm_init(d_in, cfg),
+        "down_proj": dense_init(ks[5], d_in, d, cfg),
+    }
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[dict] = None, ctx=None) -> Tuple[jax.Array, Optional[dict]]:
+    d, d_in, nh, hd = _dims(cfg)
+    b, s, _ = x.shape
+    up = dense(x, p["up_proj"], cfg)
+    xi, z = jnp.split(up, 2, axis=-1)
+
+    q = dense(xi, p["wq"], cfg).reshape(b, s, nh, hd) / math.sqrt(hd)
+    k = dense(xi, p["wk"], cfg).reshape(b, s, nh, hd)
+    v = dense(xi, p["wv"], cfg).reshape(b, s, nh, hd)
+    gates = dense(xi, p["w_gates"], cfg).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)              # (B,S,nh)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    i_g = jax.nn.sigmoid(i_raw)
+
+    # normalizer channel: v' = [v, 1]
+    v_ext = jnp.concatenate([v, jnp.ones((b, s, nh, 1), v.dtype)], axis=-1)
+
+    if cache is not None:
+        y, state = linear_attention_step(cache["ssm"], q[:, 0], k[:, 0],
+                                         v_ext[:, 0], log_f[:, 0], i_g[:, 0])
+        y = y[:, None]
+        new_cache = {"ssm": state}
+    else:
+        hs_, dks_ = engine_specs(nh, hd, ctx)
+        y, _ = chunked_linear_attention(q, k, v_ext, log_f, i_g,
+                                        chunk=cfg.xlstm.chunk,
+                                        unroll=cfg.xlstm.unroll, ctx=ctx,
+                                        h_shard=hs_, dk_shard=dks_,
+                                        mm_bf16=cfg.xlstm.mm_bf16)
+        new_cache = None
+
+    num, den = y[..., :hd], y[..., hd:]
+    h = num.astype(jnp.float32) / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
+    h = h.reshape(b, s, d_in).astype(_dtype(cfg))
+    h = apply_norm(p["norm"], h, cfg)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return dense(h, p["down_proj"], cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential, exponential gating with stabilizer)
+# ---------------------------------------------------------------------------
+def slstm_init(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, cfg),            # z, i, f, o pre-acts
+        "norm": norm_init(d, cfg),
+        "proj": dense_init(ks[1], d, d, cfg),
+    }
+
+
+def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    d = cfg.d_model
+    b, s, _ = x.shape
+    pre = dense(x, p["w_in"], cfg).astype(jnp.float32)
+    z, i_raw, f_raw, o_raw = jnp.split(pre, 4, axis=-1)      # (B,S,d) each
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+
+    def step(carry, xs):
+        c, n, m = carry
+        zt, it, ft, ot = xs
+        m_new = jnp.maximum(ft + m, it)
+        c = jnp.exp(ft + m - m_new) * c + jnp.exp(it - m_new) * zt
+        n = jnp.exp(ft + m - m_new) * n + jnp.exp(it - m_new)
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new), h
+
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["m"])
+        carry, h = step(carry, (z[:, 0], i_raw[:, 0], f_raw[:, 0], o[:, 0]))
+        h = h[:, None]
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2]}
+    else:
+        init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(2)) + \
+            (jnp.full((b, d), -1e30, jnp.float32),)
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (z, i_raw, f_raw, o))
+        _, hs = lax.scan(step, init, xs)
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = None
+
+    h = apply_norm(p["norm"], h.astype(_dtype(cfg)), cfg)
+    return dense(h, p["proj"], cfg), new_cache
+
+
+def slstm_init_cache(b: int, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((b, d), jnp.float32),
+            "n": jnp.zeros((b, d), jnp.float32),
+            "m": jnp.full((b, d), -1e30, jnp.float32)}

@@ -1,0 +1,85 @@
+"""AdamW from scratch (no optax), with state-dtype compression.
+
+Optimizer states inherit the parameter sharding (ZeRO-1 falls out of the
+FSDP param specs: m/v are sharded exactly like the params they track).
+``state_dtype='bfloat16'`` halves optimizer HBM — required for the ≥100B
+configs on 16 GiB chips (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def adamw_init(params: Pytree, state_dtype: str = "float32",
+               master: bool = False) -> Pytree:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    st = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        # f32 master copy (params themselves stored bf16 => bf16 FSDP
+        # gathers and bf16 gradient reductions — §Perf mixed precision)
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(grads: Pytree, opt_state: Pytree, params: Pytree, *,
+                 lr: jax.Array | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1) -> Tuple[Pytree, Pytree]:
+    """Returns (new_params, new_opt_state).  All math in f32; m/v stored in
+    their configured dtype; decoupled weight decay on matrices only (ndim>1)."""
+    step = opt_state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    class _Upd:  # opaque (non-pytree) tuple so param trees may contain tuples
+        __slots__ = ("p", "m", "v", "w")
+
+        def __init__(self, p, m, v, w):
+            self.p, self.m, self.v, self.w = p, m, v, w
+
+    has_master = "master" in opt_state
+
+    def upd(g, m, v, p, mast):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        base = mast.astype(jnp.float32) if mast is not None else p.astype(jnp.float32)
+        if p.ndim > 1:
+            delta = delta + weight_decay * base
+        p_new = base - lr * delta
+        return _Upd(p_new.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype), p_new if mast is not None else None)
+
+    masters = opt_state["master"] if has_master else jax.tree.map(lambda _: None, params)
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params,
+                       masters, is_leaf=lambda x: x is None)
+    pick = lambda attr: jax.tree.map(lambda t: getattr(t, attr), out,
+                                     is_leaf=lambda x: isinstance(x, _Upd))
+    new = {"m": pick("m"), "v": pick("v"), "step": step}
+    if has_master:
+        new["master"] = pick("w")
+    return pick("p"), new

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = lr * (s + 1.0) / max(warmup_steps, 1)
+    t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup_steps, warm, cos)

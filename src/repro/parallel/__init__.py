@@ -1,0 +1,2 @@
+from .sharding import param_specs, make_ctx, batch_spec, shard_params
+from .steps import make_train_step, make_prefill_step, make_decode_step, make_loss_fn

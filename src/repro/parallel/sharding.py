@@ -1,0 +1,175 @@
+"""Sharding rules: parameter-name → PartitionSpec, driven by the Table-1 cost
+model's layout conventions (DP/FSDP over 'data' (+'pod'), TP/EP over 'model').
+
+Rules are path-based: the last path components of each leaf select a template.
+Templates use the symbols:
+  IN   (d_in, d_out) weight:  P(fsdp, 'model')   — column-parallel
+  OUT  (d_out, d_in) weight:  P('model', fsdp)   — row-parallel
+  EP_IN/EP_OUT             : expert tensors (layout depends on n_experts vs ep)
+  REP                      : replicated
+Stacked (scanned) parameters get a leading ``None`` automatically by rank.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models.moe import MeshCtx
+
+Pytree = Any
+
+
+def make_ctx(mesh: Mesh, parallel: ParallelConfig) -> MeshCtx:
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    if parallel.dp_over_model:
+        batch_axes += ("model",)
+    fsdp: Tuple[str, ...] = ()
+    if parallel.fsdp_params:
+        fsdp = ("data",)
+        if parallel.fsdp_pod and "pod" in axes:
+            fsdp = ("pod", "data")
+    return MeshCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                   fsdp_axes=fsdp, moe_a2a_ep=parallel.moe_a2a_ep,
+                   engine_replicate=parallel.engine_replicate,
+                   seq_parallel=parallel.sequence_parallel,
+                   foopar_tp=parallel.use_foopar_tp,
+                   manual_attention=parallel.manual_attention,
+                   dp_over_model=parallel.dp_over_model)
+
+
+def batch_spec(ctx: MeshCtx, ndim: int, batch_dim: int = 0) -> P:
+    parts = [None] * ndim
+    parts[batch_dim] = ctx.batch_axes
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# rule table
+# ---------------------------------------------------------------------------
+_IN_NAMES = {"wq", "wk", "wv", "w_gate", "w_up", "up_proj", "w_in", "in_proj",
+             "w_gates", "unembed"}
+_OUT_NAMES = {"wo", "w_down", "down_proj", "out_proj", "proj"}
+_REP_NAMES = {"scale", "bias", "router", "A_log", "D", "dt_bias",
+              "enc_pos", "dec_pos"}
+
+
+def _leaf_spec(path: Tuple[str, ...], leaf, cfg: ModelConfig, ctx: MeshCtx,
+               use_ep: bool) -> P:
+    name = path[-1]
+    parents = set(path[:-1])
+    fsdp = ctx.fsdp_axes if ctx.fsdp_axes else None
+    model = ctx.model_axis
+
+    def with_stack(spec_dims):
+        pad = leaf.ndim - len(spec_dims)
+        return P(*([None] * pad + spec_dims))
+
+    if "shared" in parents:  # MoE shared expert: must match moe_ffn in_specs
+        if name in ("w_gate", "w_up"):
+            return with_stack([None, model])
+        if name == "w_down":
+            return with_stack([model, None])
+
+    if "moe" in parents and name in ("w_gate", "w_up", "w_down"):
+        if ctx.moe_a2a_ep:
+            if name == "w_down":                    # (E, ff, d)
+                return with_stack(["data", model, None])
+            return with_stack(["data", None, model])  # (E, d, ff)
+        if use_ep:
+            if name == "w_down":                    # (E, ff, d)
+                return with_stack([model, None, fsdp])
+            return with_stack([model, fsdp, None])  # (E, d, ff)
+        else:
+            if name == "w_down":
+                return with_stack([None, model, fsdp])
+            return with_stack([None, fsdp, model])
+
+    if getattr(ctx, "engine_replicate", False) and \
+            parents & {"mlstm", "slstm", "mamba"}:
+        # §Perf C6: recurrent blocks run batch-parallel only — weights keep
+        # FSDP storage sharding but no TP (local matmuls, zero act collectives)
+        if name in _IN_NAMES | {"conv_w"}:
+            return with_stack([fsdp, None] if name != "conv_w" else [None, None])
+        if name in _OUT_NAMES:
+            return with_stack([None, fsdp])
+        return P(*([None] * leaf.ndim))
+
+    if name == "embedding":                          # (V, d)
+        return with_stack([model, fsdp])
+    if name == "conv_w":                             # (W, C)
+        return with_stack([None, model])
+    if name in _REP_NAMES:
+        return P(*([None] * leaf.ndim))
+    if name == "wq" and "mlstm" in parents:
+        return with_stack([fsdp, model])
+    if name in _IN_NAMES:
+        return with_stack([fsdp, model])
+    if name in _OUT_NAMES:
+        return with_stack([model, fsdp])
+    # default: replicate (and surface it for review)
+    return P(*([None] * leaf.ndim))
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop partitions on dims the mesh axes don't divide evenly (jit
+    in_shardings require exact divisibility, unlike constraints)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(part if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(params: Pytree, cfg: ModelConfig, ctx: MeshCtx) -> Pytree:
+    """PartitionSpec tree mirroring ``params``."""
+    use_ep = bool(cfg.moe) and cfg.moe.n_experts % ctx.model_size == 0 \
+        and cfg.moe.n_experts >= ctx.model_size
+
+    def strip_model(spec):
+        if not getattr(ctx, "dp_over_model", False):
+            return spec
+        parts = []
+        for part in spec:
+            if part == ctx.model_axis:
+                parts.append(None)
+            elif isinstance(part, tuple):
+                parts.append(tuple(a for a in part if a != ctx.model_axis) or None)
+            else:
+                parts.append(part)
+        return P(*parts)
+
+    def visit(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        spec = strip_model(_leaf_spec(names, leaf, cfg, ctx, use_ep))
+        return sanitize_spec(spec, leaf.shape, ctx.mesh)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def to_shardings(spec_tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_params(params: Pytree, cfg: ModelConfig, ctx: MeshCtx) -> Pytree:
+    """Device-put params according to the rules (for real runs; the dry-run
+    only ever uses the specs)."""
+    shardings = to_shardings(param_specs(params, cfg, ctx), ctx.mesh)
+    return jax.device_put(params, shardings)
+
+
+def opt_specs(param_spec_tree: Pytree) -> Pytree:
+    """Optimizer state specs: m/v mirror params; step replicated."""
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}

@@ -1,0 +1,189 @@
+"""Train / prefill / decode step builders (pjit programs).
+
+Each builder returns a pure function plus its (in/out) sharding trees so the
+same object serves the real launcher and the dry-run's
+``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.models.moe import MeshCtx
+from repro import optim
+from .sharding import param_specs, opt_specs, to_shardings, batch_spec
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, *,
+                  z_loss: float = 0.0, chunk: Optional[int] = None) -> jax.Array:
+    """Token-mean CE over (B, S, V) f32 logits; vocab may be model-sharded —
+    the label pick uses an iota-mask reduction (shardable, no gather)."""
+
+    def _ce(lg, lb):
+        lg = lg.astype(jnp.float32)
+        m = jnp.max(lg, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+        vocab_iota = lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+        picked = jnp.sum(jnp.where(vocab_iota == lb[..., None], lg, 0.0), axis=-1)
+        loss = lse - picked
+        if z_loss:
+            loss = loss + z_loss * lse ** 2
+        return jnp.sum(loss), loss.size
+
+    if chunk is None:
+        total, n = _ce(logits, labels)
+        return total / n
+    # sequence-chunked CE (bounds the (B, Sc, V) f32 transient); pad the
+    # remainder with an ignored label (-1 never matches the vocab iota and
+    # its lse contribution is subtracted via the weight mask)
+    s = logits.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        logits = jnp.pad(logits, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    sp = s + pad
+    lg = logits.reshape(logits.shape[0], sp // chunk, chunk, -1)
+    lb = labels.reshape(labels.shape[0], sp // chunk, chunk)
+
+    def body(acc, xs):
+        lgc, lbc = xs
+        lgf = lgc.astype(jnp.float32)
+        m = jnp.max(lgf, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lgf - m), axis=-1)) + m[..., 0]
+        iota = lax.broadcasted_iota(jnp.int32, lgf.shape, lgf.ndim - 1)
+        picked = jnp.sum(jnp.where(iota == lbc[..., None], lgf, 0.0), axis=-1)
+        w = (lbc >= 0).astype(jnp.float32)
+        return acc + jnp.sum((lse - picked) * w), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32),
+                        (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0)))
+    return total / labels_size_orig(labels, pad)
+
+
+def labels_size_orig(padded_labels, pad):
+    b, sp = padded_labels.shape
+    return b * (sp - pad)
+
+
+def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
+                 ctx: Optional[MeshCtx]):
+    def loss_fn(params, batch):
+        if cfg.enc_dec:
+            logits, aux = E.forward(params, batch["frames"], batch["tokens"], cfg,
+                                    remat=pcfg.remat, ctx=ctx,
+                                    unroll=pcfg.scan_unroll)
+        else:
+            logits, aux = T.forward(params, batch["tokens"], cfg, ctx=ctx,
+                                    remat=pcfg.remat, unroll=pcfg.scan_unroll)
+        if ctx is not None:
+            vpart = None if getattr(ctx, "dp_over_model", False) else "model"
+            logits = lax.with_sharding_constraint(
+                logits, NamedSharding(ctx.mesh, P(ctx.batch_axes, None, vpart)))
+        loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                             z_loss=tcfg.z_loss, chunk=pcfg.logit_chunk)
+        loss = loss + 1e-2 * aux  # MoE load-balance
+        return loss, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
+                    ctx: Optional[MeshCtx]) -> Callable:
+    loss_fn = make_loss_fn(cfg, pcfg, tcfg, ctx)
+
+    def train_step(state: Pytree, batch: Pytree) -> Tuple[Pytree, Pytree]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        if pcfg.grad_barrier:
+            # pin the gradient reductions in their native (bf16) dtype: the
+            # barrier stops XLA from sinking the all-reduce past the f32
+            # converts of the optimizer math (§Perf A6)
+            grads = lax.optimization_barrier(grads)
+        if pcfg.grad_dtype != "float32":
+            grads = jax.tree.map(lambda g: g.astype(pcfg.grad_dtype), grads)
+        grads, gnorm = optim.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = optim.warmup_cosine(state["opt"]["step"], lr=tcfg.lr,
+                                 warmup_steps=tcfg.warmup_steps,
+                                 total_steps=tcfg.total_steps)
+        params, opt_state = optim.adamw_update(
+            grads, state["opt"], state["params"], lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig, pcfg: ParallelConfig) -> Pytree:
+    init = E.init if cfg.enc_dec else T.init
+    params = init(rng, cfg)
+    opt = optim.adamw_init(params, pcfg.opt_state_dtype,
+                           master=pcfg.master_weights)
+    if pcfg.master_weights:
+        params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    return {"params": params, "opt": opt}
+
+
+def abstract_train_state(cfg: ModelConfig, pcfg: ParallelConfig) -> Pytree:
+    return jax.eval_shape(partial(init_train_state, cfg=cfg, pcfg=pcfg),
+                          jax.random.PRNGKey(0))
+
+
+def train_state_shardings(cfg: ModelConfig, pcfg: ParallelConfig,
+                          ctx: MeshCtx, state: Pytree) -> Pytree:
+    pspec = param_specs(state["params"], cfg, ctx)
+    ospec = opt_specs(pspec)
+    if "master" in state["opt"]:
+        ospec["master"] = pspec
+    tree = {"params": pspec, "opt": ospec}
+    return to_shardings(tree, ctx.mesh)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                      ctx: Optional[MeshCtx]) -> Callable:
+    """Full-sequence forward returning last-position logits (the KV cache for
+    a production server would be captured here; the dry-run measures the
+    forward cost, which dominates)."""
+
+    def prefill(params, batch):
+        if cfg.enc_dec:
+            logits, _ = E.forward(params, batch["frames"], batch["tokens"], cfg,
+                                  remat="none", ctx=ctx, unroll=pcfg.scan_unroll)
+        else:
+            logits, _ = T.forward(params, batch["tokens"], cfg, ctx=ctx, remat="none",
+                                  unroll=pcfg.scan_unroll)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                     ctx: Optional[MeshCtx]) -> Callable:
+    def decode(params, token, cache, pos, enc_out=None):
+        if cfg.enc_dec:
+            logit, new_cache = E.decode_step(params, token, cache, pos, enc_out, cfg,
+                                             unroll=pcfg.scan_unroll, ctx=ctx)
+        else:
+            logit, new_cache = T.decode_step(params, token, cache, pos, cfg, ctx=ctx,
+                                             unroll=pcfg.scan_unroll)
+        return jnp.argmax(logit, axis=-1).astype(jnp.int32), new_cache
+
+    return decode

@@ -1,0 +1,1 @@
+from .recovery import TrainingRunner, StepWatchdog, ElasticPlan

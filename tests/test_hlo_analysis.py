@@ -1,0 +1,47 @@
+"""Unit tests for the compiled-HLO collective parser (roofline input)."""
+from repro.launch.hlo_analysis import collective_stats, _result_bytes, _OP_RE
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,4096,3072]{2,1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[256,256,3072]{2,1,0} all-gather(%y), replica_groups=[1,16]<=[16], dimensions={0}
+  %rs = f32[16,256]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(%u, %v), replica_groups=[2,8]<=[16]
+  %cp = bf16[64,64]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ard = f32[4]{0} all-reduce-done(%ar2)
+  %ars = (f32[16]{0}, f32[16]{0}) all-reduce-start(%q), replica_groups=[1,4]<=[4]
+}
+"""
+
+
+def test_collective_stats_counts_and_bytes():
+    st = collective_stats(HLO, 256)
+    per = st["per_op"]
+    # all-reduce: one sync (16*4096*3072*4 bytes) + one -start (2*16*4)
+    ar_sync = 16 * 4096 * 3072 * 4
+    assert per["all-reduce"]["count"] == 2
+    assert per["all-reduce"]["result_bytes"] == ar_sync + 2 * 16 * 4
+    # group size parsed from [16,16]<=[256] => p=16
+    expected_wire = 2 * ar_sync * 15 / 16
+    assert abs(per["all-reduce"]["wire_bytes"] -
+               (expected_wire + 2 * (2 * 16 * 4) * 3 / 4)) < 1.0
+    # all-gather
+    ag = 256 * 256 * 3072 * 2
+    assert per["all-gather"]["result_bytes"] == ag
+    assert abs(per["all-gather"]["wire_bytes"] - ag * 15 / 16) < 1.0
+    # reduce-scatter with explicit groups {{0,1,2,3}} => p=4
+    rs = 16 * 256 * 4
+    assert per["reduce-scatter"]["wire_bytes"] == rs * 3
+    # tuple-result all-to-all counts both halves
+    assert per["all-to-all"]["result_bytes"] == 2 * 8 * 128 * 4
+    # permute = raw bytes
+    assert per["collective-permute"]["wire_bytes"] == 64 * 64 * 2
+    # -done line ignored
+    assert st["wire_bytes"] > 0
+
+
+def test_result_bytes_tuple():
+    line = "  %x = (bf16[2,4]{1,0}, f32[3]{0}) all-to-all(%a, %b), replica_groups=[1,2]<=[2]"
+    m = _OP_RE.search(line)
+    assert _result_bytes(line, m.start(1)) == 2 * 4 * 2 + 3 * 4

@@ -1,0 +1,64 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 256, 128, 128, 256),
+    (512, 256, 384, 256, 128, 128),
+    (64, 64, 64, 64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_matmul_kernel(m, k, n, bm, bn, bk, dtype):
+    a = jnp.array(rng.randn(m, k), dtype)
+    b = jnp.array(rng.randn(k, n), dtype)
+    got = ops.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 2e-2 if dtype == np.float16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 64, 128), (64, 256, 64)])
+@pytest.mark.parametrize("uk", [4, 8])
+def test_minplus_kernel(m, k, n, uk):
+    a = jnp.array(rng.rand(m, k) * 10, jnp.float32)
+    b = jnp.array(rng.rand(k, n) * 10, jnp.float32)
+    got = ops.minplus(a, b, bm=64, bn=64, bk=64, uk=uk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.minplus(a, b)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Lq,Lk,D,causal,window", [
+    (1, 4, 2, 256, 256, 64, True, None),     # GQA causal prefill
+    (2, 2, 2, 128, 128, 32, False, None),    # MHA bidirectional
+    (1, 4, 1, 256, 256, 64, True, 96),       # sliding window
+    (1, 2, 1, 1, 256, 64, True, None),       # decode (1 query vs cache)
+    (1, 8, 8, 128, 128, 128, True, None),    # hd=128 MXU-aligned
+])
+def test_flash_attention_kernel(B, Hq, Hkv, Lq, Lk, D, causal, window):
+    q = jnp.array(rng.randn(B, Hq, Lq, D), jnp.float32)
+    k = jnp.array(rng.randn(B, Hkv, Lk, D), jnp.float32)
+    v = jnp.array(rng.randn(B, Hkv, Lk, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True, bq=64, bkv=64)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jnp.array(rng.randn(1, 4, 128, 64), jnp.bfloat16)
+    k = jnp.array(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    v = jnp.array(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, interpret=True, bq=64, bkv=64)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)

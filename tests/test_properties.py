@@ -1,0 +1,157 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel
+from repro.kernels import ref
+from repro.parallel.steps import cross_entropy
+from repro.models import layers as L
+from repro.config import ModelConfig
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# cost model (Table 1)
+# ---------------------------------------------------------------------------
+@given(m=st.integers(1, 10**9), p=st.sampled_from([2, 4, 16, 64, 256]))
+def test_reduce_cheaper_than_allgather(m, p):
+    """Θ(log p) reduce never beats Θ(p) gather asymptotically: for any size,
+    reduceD ≤ allGatherD at equal message size (t_s, t_w > 0, p ≥ 2)."""
+    assert costmodel.t_reduce(m, p) <= costmodel.t_all_gather(m, p) + 1e-12
+
+
+@given(m=st.integers(1, 10**9), p=st.sampled_from([2, 4, 16, 64]))
+def test_costs_monotone_in_p(m, p):
+    for fn in (costmodel.t_reduce, costmodel.t_broadcast, costmodel.t_all_gather,
+               costmodel.t_all_to_all, costmodel.t_all_reduce):
+        assert fn(m, 2 * p) >= fn(m, p) - 1e-12
+
+
+@given(st.integers(2, 4096))
+def test_isoefficiency_orderings(p):
+    """Paper §4: grid algorithm scales better than generic (W_grid ≤ W_generic
+    up to constants for large p)."""
+    if p >= 64:
+        assert costmodel.isoefficiency_matmul_grid(p) <= \
+            costmodel.isoefficiency_matmul_generic(p)
+
+
+@given(flops=st.floats(1e6, 1e18), byts=st.floats(1e3, 1e15),
+       coll=st.floats(0, 1e15), chips=st.sampled_from([1, 256, 512]))
+def test_roofline_dominant_is_max(flops, byts, coll, chips):
+    t = costmodel.roofline_terms(flops, byts, coll, chips)
+    assert t["bound_s"] == max(t["compute_s"], t["memory_s"], t["collective_s"])
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+@given(b=st.integers(1, 3), s=st.integers(2, 9), v=st.integers(2, 33),
+       seed=st.integers(0, 100))
+def test_cross_entropy_matches_naive(b, s, v, seed):
+    rng = np.random.RandomState(seed)
+    logits = jnp.array(rng.randn(b, s, v), jnp.float32)
+    labels = jnp.array(rng.randint(0, v, (b, s)))
+    got = float(cross_entropy(logits, labels))
+    lp = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    want = -np.mean([lp[i, j, labels[i, j]] for i in range(b) for j in range(s)])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@given(s=st.sampled_from([8, 16]), chunk=st.sampled_from([2, 4, 8]))
+def test_cross_entropy_chunked_equal(s, chunk):
+    rng = np.random.RandomState(0)
+    logits = jnp.array(rng.randn(2, s, 16), jnp.float32)
+    labels = jnp.array(rng.randint(0, 16, (2, s)))
+    np.testing.assert_allclose(float(cross_entropy(logits, labels)),
+                               float(cross_entropy(logits, labels, chunk=chunk)),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 50))
+def test_rope_preserves_norm(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.array(rng.randn(1, 8, 2, 32), jnp.float32)
+    pos = jnp.arange(8)
+    y = L.rope(x, pos, CFG)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+@given(seed=st.integers(0, 20), i=st.integers(0, 6))
+def test_attention_causality(seed, i):
+    """Output at position i must not depend on tokens at positions > i."""
+    rng = np.random.RandomState(seed)
+    p = L.attention_init(jax.random.PRNGKey(seed), CFG)
+    x1 = jnp.array(rng.randn(1, 8, 32), jnp.float32)
+    x2 = np.asarray(x1).copy()
+    x2[:, i + 1:] += rng.randn(*x2[:, i + 1:].shape)  # perturb the future
+    pos = jnp.arange(8)
+    y1, _ = L.attention(p, x1, pos, CFG)
+    y2, _ = L.attention(p, jnp.array(x2), pos, CFG)
+    np.testing.assert_allclose(np.asarray(y1)[:, :i + 1],
+                               np.asarray(y2)[:, :i + 1], rtol=1e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 20))
+def test_minplus_semiring_identity(seed):
+    """A ⊗ I_minplus == A where I has 0 diagonal, +inf elsewhere."""
+    rng = np.random.RandomState(seed)
+    a = jnp.array(rng.rand(16, 16) * 5, jnp.float32)
+    eye = jnp.where(jnp.eye(16, dtype=bool), 0.0, jnp.inf).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref.minplus(a, eye)), np.asarray(a),
+                               rtol=1e-6)
+
+
+@given(seed=st.integers(0, 20))
+def test_flash_ref_matches_softmax_attention(seed):
+    """The flash oracle equals dense softmax attention (no masking)."""
+    rng = np.random.RandomState(seed)
+    q = jnp.array(rng.randn(1, 2, 8, 16), jnp.float32)
+    k = jnp.array(rng.randn(1, 2, 8, 16), jnp.float32)
+    v = jnp.array(rng.randn(1, 2, 8, 16), jnp.float32)
+    got = ref.flash_attention(q, k, v, causal=False)
+    s = np.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(16)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqk,bhkd->bhqd", p, v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm engine
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 10), chunk=st.sampled_from([2, 4, 16]))
+def test_chunked_engine_chunk_invariance(seed, chunk):
+    """The chunked linear recurrence gives the same answer for any chunk size
+    (and matches the naive sequential recurrence)."""
+    from repro.models.ssm import chunked_linear_attention
+    rng = np.random.RandomState(seed)
+    b, s, h, dk, dv = 1, 16, 2, 4, 4
+    q = jnp.array(rng.randn(b, s, h, dk), jnp.float32)
+    k = jnp.array(rng.randn(b, s, h, dk), jnp.float32)
+    v = jnp.array(rng.randn(b, s, h, dv), jnp.float32)
+    la = jnp.array(-np.abs(rng.rand(b, s, h)) * 0.1, jnp.float32)
+    g = jnp.array(rng.rand(b, s, h), jnp.float32)
+
+    y, _ = chunked_linear_attention(q, k, v, la, g, chunk=chunk)
+
+    # naive recurrence
+    state = np.zeros((b, h, dk, dv))
+    want = np.zeros((b, s, h, dv))
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for t in range(s):
+        state = state * np.exp(np.asarray(la)[:, t])[..., None, None] + \
+            np.einsum("bh,bhd,bhv->bhdv", np.asarray(g)[:, t], kn[:, t], vn[:, t])
+        want[:, t] = np.einsum("bhd,bhdv->bhv", qn[:, t], state)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-3, atol=1e-4)
