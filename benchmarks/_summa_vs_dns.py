@@ -1,0 +1,59 @@
+"""Benchmark: 2D SUMMA / Cannon vs 3D DNS matmul (the §4.3 scenario space).
+
+8 fake CPU devices, three grid projections of the same 8 chips:
+DNS on 2×2×2, SUMMA and Cannon on a 2×4 grid.  For each algorithm the
+measured wall time is printed next to the Table-1 cost-model prediction
+(with the serial matmul as the peak_flops calibration, so the model's
+communication terms — not the hardware constants — are what is tested).
+CSV: name,us_per_call,derived.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import (cannon_matmul, costmodel, dns_matmul, make_grid_mesh,
+                        summa_matmul)
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    mesh3 = make_grid_mesh((2, 2, 2), ("x", "y", "z"))
+    mesh2 = make_grid_mesh((2, 4), ("x", "y"))
+    for n in (256, 512, 1024):
+        A = jnp.array(np.random.RandomState(0).randn(n, n), jnp.float32)
+        B = jnp.array(np.random.RandomState(1).randn(n, n), jnp.float32)
+        t_serial = timeit(jax.jit(jnp.matmul), A, B)
+        # calibrate the model's flops rate from the measured serial time so
+        # the prediction isolates the communication structure
+        flops_rate = 2.0 * n**3 / t_serial
+        runs = {
+            "dns": (timeit(jax.jit(lambda a, b: dns_matmul(a, b, mesh3)), A, B),
+                    costmodel.dns_matmul_cost(n, 2, peak_flops=flops_rate)),
+            "summa": (timeit(jax.jit(lambda a, b: summa_matmul(a, b, mesh2)), A, B),
+                      costmodel.summa_matmul_cost(n, 2, 4, peak_flops=flops_rate)),
+            "cannon": (timeit(jax.jit(lambda a, b: cannon_matmul(a, b, mesh2)), A, B),
+                       costmodel.cannon_matmul_cost(n, 2, 4, peak_flops=flops_rate)),
+        }
+        for name, (t_meas, pred) in runs.items():
+            eff = t_serial / (8 * t_meas)
+            print(f"summa_vs_dns_{name}_n{n},{t_meas*1e6:.0f},"
+                  f"model_us={pred['total_s']*1e6:.0f};eff={eff:.3f}")
+
+
+if __name__ == "__main__":
+    main()

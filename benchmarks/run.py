@@ -16,7 +16,7 @@ import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 SUBPROCESS_BENCHES = ["_op_costs.py", "_matmul_efficiency.py",
-                      "_floyd_warshall.py", "_lm_step.py"]
+                      "_summa_vs_dns.py", "_floyd_warshall.py", "_lm_step.py"]
 
 
 def _isoefficiency() -> None:
@@ -27,9 +27,12 @@ def _isoefficiency() -> None:
     for p in (64, 512, 4096):
         w_gen = cm.isoefficiency_matmul_generic(p)
         w_grid = cm.isoefficiency_matmul_grid(p)
+        w_summa = cm.isoefficiency_matmul_summa(p)
         w_fw = cm.isoefficiency_floyd_warshall(p)
         print(f"iso_generic_p{p},0,W={w_gen:.3e}")
         print(f"iso_grid_p{p},0,W={w_grid:.3e};ratio_vs_generic={w_gen/w_grid:.1f}")
+        print(f"iso_summa_p{p},0,W={w_summa:.3e};"
+              f"cannon={cm.isoefficiency_matmul_cannon(p):.3e}")
         print(f"iso_fw_p{p},0,W={w_fw:.3e}")
     # predicted DNS time at TPU scale (ties Table 1 to the roofline)
     for n, q in ((40000, 8),):

@@ -100,6 +100,30 @@ def t_reduce_scatter(m: float, p: int, link: LinkClass = ICI) -> float:
     return link.t_s * math.log2(p) + link.t_w * m * (p - 1) / p
 
 
+def t_reduce_scatter_ring(m: float, p: int, link: LinkClass = ICI,
+                          t_lambda: float = 0.0) -> float:
+    """Generic-op ring reduce-scatter (``reduce_scatter_d`` with a callable):
+    p-1 nearest-neighbour steps of an m/p chunk —
+    Θ((p-1)(t_s + t_w m/p + T_λ(m/p)))."""
+    if p <= 1:
+        return 0.0
+    return (p - 1) * (link.t_s + link.t_w * m / p + t_lambda)
+
+
+def t_scan(m: float, p: int, link: LinkClass = ICI, t_lambda: float = 0.0) -> float:
+    """scanD (parallel prefix, Hillis-Steele recursive doubling):
+    Θ(log p (t_s + t_w m + T_λ(m))) — same shape as reduceD; the prefix
+    combine runs in every round."""
+    if p <= 1:
+        return 0.0
+    return math.ceil(math.log2(p)) * (link.t_s + link.t_w * m + t_lambda)
+
+
+def t_ring_shift(m: float, p: int, link: LinkClass = ICI) -> float:
+    """ringShiftD: one nearest-neighbour hop — Θ(t_s + t_w m)."""
+    return link.t_s + link.t_w * m if p > 1 else 0.0
+
+
 # ---------------------------------------------------------------------------
 # Roofline terms (per §Roofline of the experiment plan).
 # ---------------------------------------------------------------------------
@@ -161,6 +185,20 @@ def isoefficiency_matmul_grid(p: int) -> float:
     return p * math.log2(max(p, 2))
 
 
+def isoefficiency_matmul_summa(p: int) -> float:
+    """SUMMA on a √p×√p grid: per step, two Θ(log √p) panel broadcasts; the
+    bandwidth term t_w n²/√p · log √p dominates the overhead, giving
+    W ∈ Θ(p^{3/2} log p) — between DNS's Θ(p log p) (which pays p^{1/3}
+    memory replication for it) and generic's Θ(p^{5/3})."""
+    return p ** 1.5 * math.log2(max(p, 2))
+
+
+def isoefficiency_matmul_cannon(p: int) -> float:
+    """Cannon: same Θ(n²/√p) bandwidth per process but nearest-neighbour
+    only (no log-factor broadcast trees): W ∈ Θ(p^{3/2})."""
+    return p ** 1.5
+
+
 def isoefficiency_floyd_warshall(p: int) -> float:
     """Paper §5: W ∈ Θ((√p log p)^3)."""
     return (math.sqrt(p) * math.log2(max(p, 2))) ** 3
@@ -206,6 +244,55 @@ def dns_matmul_cost(n: int, q: int, bytes_per_elt: int = 4, link: LinkClass = IC
         "total_s": t_bcast + t_mult + t_red,
         "serial_s": 2.0 * n**3 / peak_flops,
         "p": q**3,
+    }
+
+
+def summa_matmul_cost(n: int, qx: int, qy: int | None = None,
+                      bytes_per_elt: int = 4, link: LinkClass = ICI,
+                      peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted runtime of SUMMA on a q_x × q_y grid (square by default).
+
+    L = lcm(q_x, q_y) panel steps; each step row-broadcasts an
+    (n/q_x × n/L) A panel over the q_y-group and column-broadcasts an
+    (n/L × n/q_y) B panel over the q_x-group; local flops total 2n³/p.
+    """
+    qy = qy or qx
+    L = math.lcm(qx, qy)
+    m_a = (n // qx) * (n // L) * bytes_per_elt
+    m_b = (n // L) * (n // qy) * bytes_per_elt
+    t_comm = L * (t_broadcast(m_a, qy, link) + t_broadcast(m_b, qx, link))
+    t_mult = 2.0 * n**3 / (qx * qy) / peak_flops
+    return {
+        "broadcast_s": t_comm,
+        "compute_s": t_mult,
+        "total_s": t_comm + t_mult,
+        "serial_s": 2.0 * n**3 / peak_flops,
+        "p": qx * qy,
+        "mem_elts_per_proc": 3 * (n // qx) * (n // qy),
+    }
+
+
+def cannon_matmul_cost(n: int, qx: int, qy: int | None = None,
+                       bytes_per_elt: int = 4, link: LinkClass = ICI,
+                       peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted runtime of Cannon on a q_x × q_y grid: one skew ppermute
+    per operand + (q_y-1) ring shifts of the A block and (q_x-1) of the B
+    block — nearest-neighbour only, no broadcast trees, so the communication
+    term drops the log factor of SUMMA."""
+    qy = qy or qx
+    m_a = (n // qx) * (n // qy) * bytes_per_elt
+    m_b = m_a
+    t_comm = (t_shift(m_a, qy, link) + t_shift(m_b, qx, link)
+              + (qy - 1) * t_ring_shift(m_a, qy, link)
+              + (qx - 1) * t_ring_shift(m_b, qx, link))
+    t_mult = 2.0 * n**3 / (qx * qy) / peak_flops
+    return {
+        "shift_s": t_comm,
+        "compute_s": t_mult,
+        "total_s": t_comm + t_mult,
+        "serial_s": 2.0 * n**3 / peak_flops,
+        "p": qx * qy,
+        "mem_elts_per_proc": 3 * (n // qx) * (n // qy),
     }
 
 

@@ -15,7 +15,8 @@ from typing import Any, Callable, Sequence, Tuple
 import jax
 from jax import lax
 
-from .dseq import DSeq
+from .compat import axis_size
+from .dseq import DSeq, apply_d, reduce_d, shift_d
 
 Pytree = Any
 
@@ -40,7 +41,7 @@ class GridN:
 
     @property
     def shape(self) -> Tuple[int, ...]:
-        return tuple(lax.axis_size(a) for a in self.axes)
+        return tuple(axis_size(a) for a in self.axes)
 
     def mapD(self, f: Callable[..., Pytree]) -> Pytree:
         """Each process computes ``f(*coords)`` — the paper's
@@ -56,14 +57,77 @@ class GridN:
 
 
 class Grid2D(GridN):
+    """A q_x × q_y process grid.  Convention: the ``x`` axis indexes the
+    process *row* i, ``y`` the process *column* j — so a "row" of the grid is
+    the communication group that varies in y (all columns of one row), and
+    row-wise collectives run over the y axis.
+
+    The row/column broadcast + reduce helpers below are the primitives of
+    the 2D matmul family (SUMMA's k-panel broadcasts, Cannon's ring shifts)
+    and of the 2D Floyd-Warshall — paper §4.3/§5."""
+
     def __init__(self, x_axis: str = "x", y_axis: str = "y"):
         super().__init__(axes=(x_axis, y_axis))
+
+    @property
+    def row_axis(self) -> str:  # the axis a row-wise collective runs over
+        return self.axes[1]
+
+    @property
+    def col_axis(self) -> str:
+        return self.axes[0]
 
     def xSeq(self, local: Pytree) -> DSeq:  # variable in x, fixed y
         return self.seq(self.axes[0], local)
 
     def ySeq(self, local: Pytree) -> DSeq:
         return self.seq(self.axes[1], local)
+
+    # -- 2D collective helpers (SUMMA / Cannon / FW building blocks) -------
+    def bcast_row(self, local: Pytree, src_col: int | jax.Array) -> Pytree:
+        """One-to-all broadcast within each process row: every process of row
+        i receives the element held at (i, src_col) — Θ(log q_y (t_s + t_w m))."""
+        return apply_d(local, src_col, self.row_axis)
+
+    def bcast_col(self, local: Pytree, src_row: int | jax.Array) -> Pytree:
+        """Broadcast within each process column from row ``src_row``."""
+        return apply_d(local, src_row, self.col_axis)
+
+    def reduce_row(self, local: Pytree, op: Callable | str = "sum",
+                   root: int | None = None) -> Pytree:
+        """reduceD over each process row (the y group)."""
+        return reduce_d(local, op, self.row_axis, root=root)
+
+    def reduce_col(self, local: Pytree, op: Callable | str = "sum",
+                   root: int | None = None) -> Pytree:
+        return reduce_d(local, op, self.col_axis, root=root)
+
+    def shift_row(self, local: Pytree, delta: int) -> Pytree:
+        """Cyclic shift within each process row (Cannon's A-movement)."""
+        return shift_d(local, delta, self.row_axis)
+
+    def shift_col(self, local: Pytree, delta: int) -> Pytree:
+        return shift_d(local, delta, self.col_axis)
+
+    def skew(self, local: Pytree, *, by_row: bool, scale: int = 1) -> Pytree:
+        """Cannon's alignment step as one grid-wide ppermute.
+
+        ``by_row=True`` sends (i, j) → (i, j - i·scale mod q_y) — row i's
+        blocks rotate left by i·scale (A's skew); ``by_row=False`` sends
+        (i, j) → (i - j·scale mod q_x, j) (B's skew).  A single ppermute over
+        the linearized grid, Θ(t_s + t_w m): per-row distances differ, which
+        a single-axis shift cannot express.
+        """
+        qx, qy = self.shape
+        perm = []
+        for i in range(qx):
+            for j in range(qy):
+                if by_row:
+                    dst = (i, (j - i * scale) % qy)
+                else:
+                    dst = ((i - j * scale) % qx, j)
+                perm.append((i * qy + j, dst[0] * qy + dst[1]))
+        return jax.tree.map(lambda l: lax.ppermute(l, self.axes, perm), local)
 
 
 class Grid3D(GridN):

@@ -24,12 +24,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import costmodel
+from .compat import shard_map as _shard_map
 from .dseq import DSeq
 
 
 def _manual(f, mesh, in_specs, out_specs, axis):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         axis_names=frozenset({axis}), check_vma=False)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      axis_names={axis}, check=False)
 
 
 def foopar_matmul_row(x: jax.Array, w: jax.Array, *, mesh, axis: str = "model",
@@ -96,9 +97,9 @@ def dns_matmul_2d(x: jax.Array, w: jax.Array, *, mesh,
         return jax.lax.psum(part, contract_axis)
 
     nx = x.ndim
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(*([None] * (nx - 1) + [contract_axis])), P(contract_axis, out_axis)),
         out_specs=P(*([None] * (nx - 1) + [out_axis])),
-        axis_names=frozenset({contract_axis, out_axis}), check_vma=False,
+        axis_names={contract_axis, out_axis}, check=False,
     )(x, w)

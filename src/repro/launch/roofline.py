@@ -3,10 +3,15 @@ EXPERIMENTS.md §Roofline tables (per-cell three-term roofline, dominant
 bottleneck, MODEL_FLOPS ratio, and a one-line recommendation).
 
   PYTHONPATH=src python -m repro.launch.roofline results/dryrun_16x16.json
+
+Also hosts the parallel-matmul scenario table (paper §4 + the 2D family):
+
+  PYTHONPATH=src python -m repro.launch.roofline --matmul n=8192,p=64
 """
 from __future__ import annotations
 
 import json
+import math
 import sys
 
 from repro.core import costmodel
@@ -63,8 +68,48 @@ def table(path: str) -> str:
     return "\n".join(out)
 
 
+def matmul_scenarios_table(n: int, p: int, bytes_per_elt: int = 2) -> str:
+    """Predicted time / efficiency / memory of every parallel-matmul variant
+    in the repo on p chips, from the Table-1 cost model.  DNS needs a cube
+    grid, SUMMA/Cannon a square one; rows are skipped when p doesn't fit."""
+    rows = ["| algorithm | grid | total_s | efficiency | per-proc elts | "
+            "isoefficiency W(p) |", "|---|---|---|---|---|---|"]
+
+    def eff(c):
+        return c["serial_s"] / (c["p"] * c["total_s"])
+
+    q3 = round(p ** (1 / 3))
+    if q3**3 == p and n % q3 == 0:
+        c = costmodel.dns_matmul_cost(n, q3, bytes_per_elt)
+        rows.append(f"| DNS (3D) | {q3}³ | {c['total_s']:.4g} | {eff(c):.3f} | "
+                    f"{3 * (n // q3) ** 2} (×{q3} replicated) | "
+                    f"{costmodel.isoefficiency_matmul_grid(p):.3g} |")
+    q2 = round(math.isqrt(p))
+    if q2 * q2 == p and n % q2 == 0:
+        c = costmodel.summa_matmul_cost(n, q2, bytes_per_elt=bytes_per_elt)
+        rows.append(f"| SUMMA (2D) | {q2}² | {c['total_s']:.4g} | {eff(c):.3f} | "
+                    f"{c['mem_elts_per_proc']} | "
+                    f"{costmodel.isoefficiency_matmul_summa(p):.3g} |")
+        c = costmodel.cannon_matmul_cost(n, q2, bytes_per_elt=bytes_per_elt)
+        rows.append(f"| Cannon (2D) | {q2}² | {c['total_s']:.4g} | {eff(c):.3f} | "
+                    f"{c['mem_elts_per_proc']} | "
+                    f"{costmodel.isoefficiency_matmul_cannon(p):.3g} |")
+    rows.append(f"| generic (1D, Alg. 1) | {p} | — | — | — | "
+                f"{costmodel.isoefficiency_matmul_generic(p):.3g} |")
+    return "\n".join(rows)
+
+
 def main():
-    for path in sys.argv[1:]:
+    args = sys.argv[1:]
+    if args and args[0] == "--matmul":
+        try:
+            kv = dict(s.split("=") for s in args[1].split(",")) if len(args) > 1 else {}
+            n, p = int(kv.get("n", 8192)), int(kv.get("p", 64))
+        except ValueError:
+            raise SystemExit("usage: roofline --matmul n=<size>,p=<chips>")
+        print(matmul_scenarios_table(n, p))
+        return
+    for path in args:
         print(f"\n### {path}\n")
         print(table(path))
 

@@ -163,12 +163,17 @@ def _sdpa_manual(q, k, v, ctx, *, causal, window):
         off = lax.axis_index(M) * s_loc
         return _sdpa(ql, kl, vl, causal=causal, window=window, q_offset=off)
 
-    return jax.shard_map(
+    # fully manual over the mesh (axis_index inside a partial-manual region
+    # lowers to PartitionId, which SPMD partitioning rejects): batch over the
+    # batch axes, sequence over model.
+    bat = ctx.batch_axes if ctx.batch_axes else None
+    from repro.core.compat import shard_map as _shard_map
+    return _shard_map(
         body, mesh=ctx.mesh,
-        in_specs=(P(None, M, None, None, None), P(None, None, None, None),
-                  P(None, None, None, None)),
-        out_specs=P(None, M, None, None, None),
-        axis_names=frozenset({M}), check_vma=False)(q, k, v)
+        in_specs=(P(bat, M, None, None, None), P(bat, None, None, None),
+                  P(bat, None, None, None)),
+        out_specs=P(bat, M, None, None, None),
+        check=False)(q, k, v)
 
 
 def attention(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *,

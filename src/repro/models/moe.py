@@ -34,6 +34,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core.compat import shard_map as _shard_map
 from repro.models.layers import dense_init, _dtype, _pdtype
 
 Params = dict
@@ -321,12 +322,12 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
                                  data_axis="data", model_axis=ctx.model_axis,
                                  dp=dp, my_data_shard=lax.axis_index("data"))
 
-        fn = jax.shard_map(
+        fn = _shard_map(
             body, mesh=ctx.mesh,
             in_specs=(bspec, P(None, None), espec_in, espec_in, espec_out,
                       shared_specs),
             out_specs=(bspec, P(ctx.batch_axes, None)),
-            check_vma=False,
+            check=False,
         )
         return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
 
@@ -354,11 +355,11 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig,
             "w_down": P(ctx.model_axis, None),
         }
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=ctx.mesh,
         in_specs=(bspec, P(None, None), espec_in, espec_in, espec_out, shared_specs),
         out_specs=(bspec, P(ctx.batch_axes, None)),
-        check_vma=False,
+        check=False,
     )
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
 

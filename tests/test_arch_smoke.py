@@ -15,12 +15,39 @@ from repro.parallel import steps as S
 PCFG = ParallelConfig(remat="none", fsdp_params=False)
 TCFG = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=10, z_loss=0.0)
 
+# the biggest hybrid archs compile for tens of seconds on CPU — slow tier
+_HEAVY = {"zamba2-1.2b", "xlstm-1.3b"}
+_HEAVY_FWD = _HEAVY | {"whisper-base"}  # decode stays fast-tier (enc-dec coverage)
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
-def test_arch_forward_and_train_step(arch):
-    cfg = reduced(configs.get(arch))
+
+def _params(heavy):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in configs.ARCHS]
+
+
+FORWARD_PARAMS = _params(_HEAVY_FWD)
+ARCH_PARAMS = _params(_HEAVY)
+
+
+@pytest.fixture(scope="session")
+def arch_state():
+    """Per-arch reduced config + initialized train state, shared by every
+    test in the session (init + first trace dominate these smoke tests)."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduced(configs.get(arch))
+            cache[arch] = (cfg, S.init_train_state(jax.random.PRNGKey(0), cfg, PCFG))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", FORWARD_PARAMS)
+def test_arch_forward_and_train_step(arch, arch_state):
+    cfg, state = arch_state(arch)
     rng = jax.random.PRNGKey(0)
-    state = S.init_train_state(rng, cfg, PCFG)
     b, s = 2, 64
     batch = {"tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab)}
     if cfg.enc_dec:
@@ -44,19 +71,18 @@ def test_arch_forward_and_train_step(arch):
     assert jax.tree.reduce(max, changed) > 0, "params did not change"
 
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
-def test_arch_decode_step(arch):
-    cfg = reduced(configs.get(arch))
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
+def test_arch_decode_step(arch, arch_state):
+    cfg, state = arch_state(arch)
+    params = state["params"]
     rng = jax.random.PRNGKey(0)
     b, max_len = 2, 32
     if cfg.enc_dec:
-        params = E.init(rng, cfg)
         enc = E.encode(params, jax.random.normal(rng, (b, 16, cfg.d_model)), cfg)
         cache = E.init_cache(cfg, b, max_len)
         tok = jax.random.randint(rng, (b,), 0, cfg.vocab)
         logit, cache = E.decode_step(params, tok, cache, jnp.int32(0), enc, cfg)
     else:
-        params = T.init(rng, cfg)
         cache = T.init_cache(cfg, b, max_len)
         tok = jax.random.randint(rng, (b,), 0, cfg.vocab)
         logit, cache = T.decode_step(params, tok, cache, jnp.int32(0), cfg)

@@ -23,12 +23,27 @@ def test_dseq_table1_operations():
     _run("dseq_prog.py", "DSEQ_OK")
 
 
+def test_group_collectives_properties():
+    """scanD ≡ cumsum (incl/excl/max), reduceScatterD ≡ reshaped psum,
+    ringShiftD/allGatherRingD oracles — property-tested on 4- and 8-process
+    groups (hypothesis when installed, seeded sweep otherwise)."""
+    _run("collectives_prog.py", "COLLECTIVES_OK")
+
+
+def test_summa_cannon_matmul():
+    """SUMMA + Cannon ≡ jnp.matmul on 2×2 and 2×4 grids (square, rectangular
+    operands, Pallas local multiply) + Cannon-vs-SUMMA cost-model tie."""
+    _run("summa_prog.py", "SUMMA_OK")
+
+
+@pytest.mark.slow
 def test_paper_algorithms():
     """DNS matmul (Grid3D + Pallas local multiply), generic Algorithm 1,
     Floyd-Warshall (faithful + blocked), FooPar TP matmuls inside pjit."""
     _run("paper_algos_prog.py", "ALGOS_OK")
 
 
+@pytest.mark.slow
 def test_moe_expert_parallel():
     """EP and TP expert layouts match the single-device oracle; grads flow."""
     _run("moe_ep_prog.py", "MOE_OK")

@@ -1,0 +1,83 @@
+"""Unit tests for the scan / reduce-scatter / 2D-matmul cost-model additions.
+
+Plain pytest (no hypothesis dependency) so these always run; the
+hypothesis-widened versions live in test_properties.py.
+"""
+import math
+
+import pytest
+
+from repro.core import costmodel as cm
+
+PS = [2, 4, 8, 16, 64, 256]
+
+
+@pytest.mark.parametrize("p", PS[:-1])
+def test_t_scan_monotone_in_p(p):
+    for m in (1, 1024, 10**9):
+        assert cm.t_scan(m, 2 * p) >= cm.t_scan(m, p) - 1e-15
+
+
+@pytest.mark.parametrize("p", PS[:-1])
+def test_t_reduce_scatter_monotone_in_p(p):
+    for m in (1, 1024, 10**9):
+        assert cm.t_reduce_scatter(m, 2 * p) >= cm.t_reduce_scatter(m, p) - 1e-15
+        assert cm.t_reduce_scatter_ring(m, 2 * p) >= \
+            cm.t_reduce_scatter_ring(m, p) - 1e-15
+
+
+@pytest.mark.parametrize("p", PS[:-1])
+def test_isoefficiency_summa_monotone_in_p(p):
+    assert cm.isoefficiency_matmul_summa(2 * p) > cm.isoefficiency_matmul_summa(p)
+    assert cm.isoefficiency_matmul_cannon(2 * p) > cm.isoefficiency_matmul_cannon(p)
+
+
+@pytest.mark.parametrize("p", [64, 256, 1024, 4096])
+def test_isoefficiency_2d_orderings(p):
+    """Scalability ladder at scale: DNS (Θ(p log p)) ≤ Cannon (Θ(p^1.5)) ≤
+    SUMMA (Θ(p^1.5 log p)), and Cannon ≤ generic (Θ(p^5/3)).  SUMMA vs
+    generic flips only at astronomically large p (log p vs p^{1/6}), so it
+    is not asserted here."""
+    assert cm.isoefficiency_matmul_grid(p) <= cm.isoefficiency_matmul_cannon(p)
+    assert cm.isoefficiency_matmul_cannon(p) <= cm.isoefficiency_matmul_summa(p)
+    assert cm.isoefficiency_matmul_cannon(p) <= cm.isoefficiency_matmul_generic(p)
+
+
+def test_scan_cost_shape():
+    """t_scan is the reduce cost with the per-round combine included, and is
+    latency-exact for powers of two: ceil(log2 p) rounds."""
+    assert cm.t_scan(0, 8, cm.ICI) == 3 * cm.ICI.t_s
+    assert cm.t_scan(100, 1) == 0.0
+    assert cm.t_scan(100, 8, t_lambda=1e-6) > cm.t_scan(100, 8)
+
+
+def test_reduce_scatter_vs_all_reduce():
+    """reduce-scatter is the cheap half of an all-reduce: ≤ t_all_reduce for
+    every size/grid."""
+    for p in PS:
+        for m in (64, 2**20, 10**9):
+            assert cm.t_reduce_scatter(m, p) <= cm.t_all_reduce(m, p) + 1e-15
+
+
+@pytest.mark.parametrize("n,q", [(1024, 2), (4096, 4), (40000, 8)])
+def test_summa_cannon_cost_structure(n, q):
+    s = cm.summa_matmul_cost(n, q)
+    c = cm.cannon_matmul_cost(n, q)
+    d = cm.dns_matmul_cost(n, q)
+    # all variants do the same useful work and report coherent totals
+    assert s["compute_s"] == pytest.approx(c["compute_s"])
+    assert s["total_s"] >= s["compute_s"] and c["total_s"] >= c["compute_s"]
+    assert s["serial_s"] == pytest.approx(c["serial_s"]) == pytest.approx(d["serial_s"])
+    # Cannon's nearest-neighbour traffic never exceeds SUMMA's broadcasts
+    assert c["shift_s"] <= s["broadcast_s"] * (1 + 1e-9)
+    # 2D memory: no replication — q² processes hold 3n² elements total
+    assert s["mem_elts_per_proc"] * q * q == 3 * n * n
+
+
+def test_summa_cost_rectangular():
+    """Rectangular grids: p is q_x·q_y and panel maths stays consistent."""
+    s = cm.summa_matmul_cost(1024, 2, 4)
+    c = cm.cannon_matmul_cost(1024, 2, 4)
+    assert s["p"] == c["p"] == 8
+    assert s["compute_s"] == pytest.approx(c["compute_s"])
+    assert s["total_s"] > 0 and c["total_s"] > 0

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import costmodel
@@ -30,8 +34,31 @@ def test_reduce_cheaper_than_allgather(m, p):
 @given(m=st.integers(1, 10**9), p=st.sampled_from([2, 4, 16, 64]))
 def test_costs_monotone_in_p(m, p):
     for fn in (costmodel.t_reduce, costmodel.t_broadcast, costmodel.t_all_gather,
-               costmodel.t_all_to_all, costmodel.t_all_reduce):
+               costmodel.t_all_to_all, costmodel.t_all_reduce, costmodel.t_scan,
+               costmodel.t_reduce_scatter, costmodel.t_reduce_scatter_ring):
         assert fn(m, 2 * p) >= fn(m, p) - 1e-12
+
+
+@given(m=st.integers(1, 10**9), p=st.sampled_from([2, 4, 16, 64, 256]))
+def test_scan_between_shift_and_allgather(m, p):
+    """scanD is a log-depth pattern: dearer than one hop, cheaper than the
+    Θ(p) ring gather at equal message size."""
+    assert costmodel.t_shift(m, p) <= costmodel.t_scan(m, p) + 1e-12
+    assert costmodel.t_scan(m, p) <= costmodel.t_all_gather(m, p) + 1e-12
+
+
+@given(st.integers(64, 4096))
+def test_isoefficiency_2d_between_grid_and_generic(p):
+    """The 2D family sits between DNS and generic on the scalability ladder
+    (§4.3 analysis extended): grid ≤ cannon ≤ {summa, generic}.  summa vs
+    generic is only asymptotic (log p ≤ p^{1/6} needs astronomically large
+    p), so it is not asserted at these sizes."""
+    assert costmodel.isoefficiency_matmul_grid(p) <= \
+        costmodel.isoefficiency_matmul_cannon(p)
+    assert costmodel.isoefficiency_matmul_cannon(p) <= \
+        costmodel.isoefficiency_matmul_summa(p)
+    assert costmodel.isoefficiency_matmul_cannon(p) <= \
+        costmodel.isoefficiency_matmul_generic(p)
 
 
 @given(st.integers(2, 4096))
