@@ -10,11 +10,14 @@ Each multi-device benchmark runs in a subprocess (needs its own
 XLA_FLAGS=--xla_force_host_platform_device_count before jax init).
 Prints ``name,us_per_call,derived`` CSV lines.
 """
+import json
 import os
+import re
 import subprocess
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
+MATMUL_JSON = os.path.join(HERE, "..", "BENCH_matmul.json")
 SUBPROCESS_BENCHES = ["_op_costs.py", "_matmul_efficiency.py",
                       "_summa_vs_dns.py", "_floyd_warshall.py", "_lm_step.py"]
 
@@ -41,12 +44,37 @@ def _isoefficiency() -> None:
               f"eff={pred['serial_s']/(q**3*pred['total_s']):.3f}")
 
 
+def _write_matmul_json(lines: list) -> None:
+    """Machine-readable per-PR perf trajectory: variant -> measured
+    us_per_call and model-predicted cost at the largest benchmarked size
+    (BENCH_matmul.json at the repo root, diffable across PRs)."""
+    pat = re.compile(r"^summa_vs_dns_(\w+?)_n(\d+),(\d+),model_us=(\d+)")
+    table = {}
+    for line in lines:
+        m = pat.match(line)
+        if not m:
+            continue
+        variant, n, us, model_us = m.group(1), *map(int, m.group(2, 3, 4))
+        if variant not in table or n >= table[variant]["n"]:
+            table[variant] = {"n": n, "us_per_call": us, "model_us": model_us}
+    if table:
+        with open(MATMUL_JSON, "w") as f:
+            json.dump(table, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
 def main() -> None:
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+        assert only in SUBPROCESS_BENCHES, (only, SUBPROCESS_BENCHES)
     print("name,us_per_call,derived")
-    _isoefficiency()
+    if only is None:
+        _isoefficiency()
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
-    for bench in SUBPROCESS_BENCHES:
+    matmul_lines = []
+    for bench in SUBPROCESS_BENCHES if only is None else [only]:
         r = subprocess.run([sys.executable, os.path.join(HERE, bench)],
                            capture_output=True, text=True, env=env,
                            timeout=1200)
@@ -56,6 +84,9 @@ def main() -> None:
         for line in r.stdout.splitlines():
             if "," in line and not line.startswith(("W", "I", "/")):
                 print(line)
+                if line.startswith("summa_vs_dns_"):
+                    matmul_lines.append(line)
+    _write_matmul_json(matmul_lines)
 
 
 if __name__ == "__main__":

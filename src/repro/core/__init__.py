@@ -13,5 +13,8 @@ from .compat import abstract_mesh
 from .dns_matmul import dns_matmul, generic_matmul, dns_matmul_pallas
 from .summa import (summa_matmul, cannon_matmul, summa_matmul_pallas,
                     cannon_matmul_pallas)
+from .summa_pipelined import (summa_matmul_pipelined, cannon_matmul_25d,
+                              summa_matmul_pipelined_pallas,
+                              cannon_matmul_25d_pallas)
 from .floyd_warshall import (floyd_warshall, blocked_floyd_warshall,
                              floyd_warshall_reference)

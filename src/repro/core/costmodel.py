@@ -199,6 +199,14 @@ def isoefficiency_matmul_cannon(p: int) -> float:
     return p ** 1.5
 
 
+def isoefficiency_matmul_25d(p: int, c: int = 1) -> float:
+    """2.5D Cannon with c-fold replication: per-process bandwidth drops to
+    Θ(n²/√(c·p)), so W ∈ Θ((p/c)^{3/2}) — c = 1 recovers Cannon's Θ(p^{3/2})
+    and c = p^{1/3} reaches Θ(p), the replication-bought end of the curve
+    next to DNS's Θ(p log p)."""
+    return (p / c) ** 1.5
+
+
 def isoefficiency_floyd_warshall(p: int) -> float:
     """Paper §5: W ∈ Θ((√p log p)^3)."""
     return (math.sqrt(p) * math.log2(max(p, 2))) ** 3
@@ -293,6 +301,75 @@ def cannon_matmul_cost(n: int, qx: int, qy: int | None = None,
         "serial_s": 2.0 * n**3 / peak_flops,
         "p": qx * qy,
         "mem_elts_per_proc": 3 * (n // qx) * (n // qy),
+    }
+
+
+def summa_pipelined_cost(n: int, qx: int, qy: int | None = None,
+                         bytes_per_elt: int = 4, link: LinkClass = ICI,
+                         peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted runtime of overlap-pipelined SUMMA.
+
+    A rotates (each rank starts on its own window — a filled ring pipeline):
+    q_y - 1 block-sized nearest-neighbour hops total.  B runs one
+    double-buffered ring broadcast per panel: (q_x - 1) panel-sized hops per
+    step, the first of which is the pipeline-fill latency.  Every transfer
+    for step t+1 is in flight during step t's multiply, so the total is
+    max(t_comm, t_comp) — not their sum — plus the fill."""
+    qy = qy or qx
+    L = math.lcm(qx, qy)
+    blk = (n // qx) * (n // qy)
+    m_blk = blk * bytes_per_elt
+    m_b = (n // L) * (n // qy) * bytes_per_elt
+    t_comm = ((qy - 1) * t_ring_shift(m_blk, qy, link)
+              + L * (qx - 1) * t_ring_shift(m_b, qx, link))
+    t_comp = 2.0 * n**3 / (qx * qy) / peak_flops
+    t_fill = (qx - 1) * t_ring_shift(m_b, qx, link)
+    total = t_fill + max(t_comm, t_comp)
+    return {
+        "fill_s": t_fill,
+        "comm_s": t_comm,
+        "compute_s": t_comp,
+        "overlap_s": t_comm + t_comp - max(t_comm, t_comp),
+        "total_s": total,
+        "serial_s": 2.0 * n**3 / peak_flops,
+        "p": qx * qy,
+        # 3 blocks + the incoming A window + 2 double-buffered B panels
+        "mem_elts_per_proc": 4 * blk + 2 * (n // L) * (n // qy),
+    }
+
+
+def cannon_25d_cost(n: int, q: int, c: int = 1, bytes_per_elt: int = 4,
+                    link: LinkClass = ICI,
+                    peak_flops: float = PEAK_FLOPS_BF16) -> dict:
+    """Predicted runtime of 2.5D Cannon on a q × q × c mesh (p = q²c).
+
+    c-fold operand replication (one log-tree broadcast over the replication
+    axis at load time), a skew ppermute per operand, q/c - 1 ring-shift
+    steps per operand, and a final tree sum of the (n/q)² partial C over the
+    c layers.  Per-process traffic interpolates Cannon (c = 1, Θ(n²/√p))
+    down to the DNS-like corner (c = q, Θ(n²·c/p) plus the reduction)."""
+    assert q % c == 0, (q, c)
+    p = q * q * c
+    blk = (n // q) ** 2
+    m = blk * bytes_per_elt
+    steps = q // c
+    t_rep = 2 * t_broadcast(m, c, link)           # c-fold operand replication
+    t_skew = 2 * t_shift(m, q, link)
+    t_ring = 2 * (steps - 1) * t_ring_shift(m, q, link)
+    t_red = t_reduce(m, c, link, t_lambda=blk / peak_flops)
+    t_comp = 2.0 * n**3 / p / peak_flops
+    comm = t_rep + t_skew + t_ring + t_red
+    return {
+        "replicate_s": t_rep,
+        "shift_s": t_skew + t_ring,
+        "reduce_s": t_red,
+        "comm_s": comm,
+        "compute_s": t_comp,
+        "total_s": comm + t_comp,
+        "serial_s": 2.0 * n**3 / peak_flops,
+        "p": p,
+        "c": c,
+        "mem_elts_per_proc": 3 * blk,  # = 3·c·n²/p — the replication premium
     }
 
 

@@ -13,12 +13,67 @@ from dataclasses import dataclass
 from typing import Any, Callable, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax import lax
 
 from .compat import axis_size
-from .dseq import DSeq, apply_d, reduce_d, shift_d
+from .dseq import DSeq, apply_d, reduce_d, ring_shift_d, shift_d
 
 Pytree = Any
+
+
+@dataclass(frozen=True)
+class RingBcast:
+    """An in-flight pipelined ring broadcast along one mesh axis.
+
+    A tree broadcast (``apply_d``) delivers in Θ(log p) but every step of a
+    panel loop must wait for the whole tree.  A *ring* broadcast instead
+    forwards the element one nearest-neighbour hop per ``step()`` —
+    Θ(t_s + t_w m) each — so a caller can interleave hops of panel k+1's
+    broadcast with the local multiply of panel k (double buffering): the
+    transfer is hidden behind compute instead of serialized with it.
+
+    ``buf`` holds the broadcast value on every rank whose forward ring
+    distance from ``src`` is ≤ ``hops``.  Other ranks still hold their own
+    local element — no zero-masking is needed, because each rank's hop-h
+    select overwrites its buffer from its predecessor exactly when the
+    value arrives (distance h), before anything reads it.  After ``p - 1``
+    steps the value is everywhere and ``value`` may be read.
+    """
+
+    buf: Pytree
+    src: Any  # int | jax.Array
+    hops: int
+    axis: str
+
+    @classmethod
+    def start(cls, local: Pytree, src, axis: str) -> "RingBcast":
+        return cls(buf=local, src=src, hops=0, axis=axis)
+
+    def step(self) -> "RingBcast":
+        """Advance one nearest-neighbour hop (``ring_shift_d``)."""
+        p = axis_size(self.axis)
+        if self.hops >= p - 1:
+            return self
+        idx = lax.axis_index(self.axis)
+        # the value arrives at ring distance d exactly at hop d; lax.rem on
+        # the made-nonnegative distance avoids jnp.%'s sign-fixup op chain
+        arriving = lax.rem(idx - self.src + p, p) == self.hops + 1
+        recv = ring_shift_d(self.buf, self.axis)
+        buf = jax.tree.map(
+            lambda b, r: jnp.where(jnp.reshape(arriving, (1,) * b.ndim), r, b),
+            self.buf, recv,
+        )
+        return RingBcast(buf=buf, src=self.src, hops=self.hops + 1, axis=self.axis)
+
+    @property
+    def done(self) -> bool:
+        return self.hops >= axis_size(self.axis) - 1
+
+    @property
+    def value(self) -> Pytree:
+        assert self.done, (self.hops, self.axis)
+        return self.buf
 
 
 @dataclass(frozen=True)
@@ -108,6 +163,27 @@ class Grid2D(GridN):
 
     def shift_col(self, local: Pytree, delta: int) -> Pytree:
         return shift_d(local, delta, self.col_axis)
+
+    # -- pipelined (double-buffered) ring broadcasts -----------------------
+    def bcast_row_ring_start(self, local: Pytree, src_col) -> RingBcast:
+        """Begin a pipelined ring broadcast within each process row from
+        column ``src_col``.  Unlike ``bcast_row`` (a log-tree ``apply_d``),
+        the transfer advances one nearest-neighbour hop per
+        ``bcast_row_ring_next`` call, so the caller can issue panel k+1's
+        hops before panel k's local multiply (pipelined SUMMA)."""
+        return RingBcast.start(local, src_col, self.row_axis)
+
+    def bcast_row_ring_next(self, st: RingBcast) -> RingBcast:
+        assert st.axis == self.row_axis
+        return st.step()
+
+    def bcast_col_ring_start(self, local: Pytree, src_row) -> RingBcast:
+        """Column-wise twin of ``bcast_row_ring_start`` (over the x axis)."""
+        return RingBcast.start(local, src_row, self.col_axis)
+
+    def bcast_col_ring_next(self, st: RingBcast) -> RingBcast:
+        assert st.axis == self.col_axis
+        return st.step()
 
     def skew(self, local: Pytree, *, by_row: bool, scale: int = 1) -> Pytree:
         """Cannon's alignment step as one grid-wide ppermute.

@@ -15,10 +15,38 @@ of the scenario space, both expressed with the ``Grid2D`` helpers:
   per-process memory.  Generalized to rectangular grids by panel windows of
   size L/q_y (A) and L/q_x (B).
 
-Both accept a ``local_matmul`` kernel (e.g. the Pallas MXU kernel) exactly
-like ``dns_matmul``; cost formulas live in ``costmodel.summa_matmul_cost`` /
-``cannon_matmul_cost`` and the isoefficiency comparison in
-``costmodel.isoefficiency_matmul_summa``.
+Together with ``dns_matmul`` (3D) and ``core/summa_pipelined.py`` (the
+overlapped/replicated tier) the repo covers the full five-point parallel
+matmul scenario space.  Per process on p chips, problem size n, replication
+factor c (costs from ``core/costmodel``):
+
+  ================  =========  ==============  =======================
+  variant           memory     communication   schedule / overlap
+  ================  =========  ==============  =======================
+  SUMMA             3n²/p      Θ(n²/√p·log √p) L tree bcasts, serial
+                                               with compute
+  SUMMA-pipelined   3n²/p (×2  Θ(n²/√p) ring   per-step max(t_comm,
+                    panel buf) hops            t_comp) + Θ(√p) fill
+  Cannon            3n²/p      Θ(n²/√p)        nearest-neighbour only,
+                                               serial with compute
+  Cannon-2.5D       3c·n²/p    Θ(n²/√(c·p))    q/c steps per replica
+                                               layer + sum over c
+  DNS (3D)          3n²/p^2/3  Θ(n²/p^{2/3}    two log-tree bcasts +
+                               ·log p^{1/3})   one tree reduce
+  ================  =========  ==============  =======================
+
+The cost model picks SUMMA/Cannon when memory is tight (no replication),
+the pipelined variant whenever per-step compute can hide a ring hop (large
+n/√p), 2.5D when spare memory (c > 1 copies fit) can buy bandwidth, and
+DNS when memory is plentiful and isoefficiency (Θ(p log p)) dominates.
+
+All variants accept a ``local_matmul`` kernel (e.g. the Pallas MXU kernel)
+exactly like ``dns_matmul`` plus a ``local_matmul_acc(a, b, c)`` fused
+accumulate kernel (``kernels.ops.matmul_acc``) used by the Pallas wrappers
+so the panel loop updates C in place; cost formulas live in
+``costmodel.summa_matmul_cost`` / ``cannon_matmul_cost`` /
+``summa_pipelined_cost`` / ``cannon_25d_cost`` and the isoefficiency
+comparison in ``costmodel.isoefficiency_matmul_*``.
 """
 from __future__ import annotations
 
@@ -45,33 +73,38 @@ def _skew_panels(g: Grid2D, panels: List[jax.Array], *, qx: int, qy: int,
     With one panel per process the whole window moves as one block and the
     alignment is a single ``Grid2D.skew`` ppermute (distance i·L/q_x per row
     for A, j·L/q_y per column for B).  Multi-panel windows interleave panels
-    from different source processes, so each (source-slot → dest-slot) pair
-    becomes its own grid-wide partial ppermute; ranks absent from a partial
-    permutation receive zeros, and summing the contributions reassembles the
-    window.
+    from different source processes, but for a fixed destination slot every
+    source rank contributes exactly one of its local slots — so each rank
+    *locally selects* the slot it must send (a dynamic index into the
+    stacked window, no communication) and the whole dest slot moves as one
+    merged grid-wide ppermute: n_slots ppermutes total instead of n_slots²
+    partial ones with zero-fill adds.
     """
     n_slots = len(panels)
     if n_slots == 1:
         return [g.skew(panels[0], by_row=operand == "A",
                        scale=(L // qx) if operand == "A" else (L // qy))]
+    stacked = jnp.stack(panels, axis=0)
+    coords = g.coords[0] * qy + g.coords[1]  # linearized own rank
     out = []
     for ds in range(n_slots):
-        received = None
-        for ss in range(n_slots):
-            perm = []
-            for i in range(qx):
-                for j in range(qy):
-                    k = (i * (L // qx) + j * (L // qy) + ds) % L
-                    if k % n_slots != ss:
-                        continue
-                    owner = k // n_slots
-                    src = (i, owner) if operand == "A" else (owner, j)
-                    perm.append((src[0] * qy + src[1], i * qy + j))
-            if not perm:
-                continue
-            got = lax.ppermute(panels[ss], g.axes, perm)
-            received = got if received is None else received + got
-        out.append(received)
+        perm = []                     # one merged permutation per dest slot
+        send_slot = [-1] * (qx * qy)  # which local slot rank r contributes
+        for i in range(qx):
+            for j in range(qy):
+                k = (i * (L // qx) + j * (L // qy) + ds) % L
+                owner = k // n_slots
+                src = (i, owner) if operand == "A" else (owner, j)
+                src_lin = src[0] * qy + src[1]
+                assert send_slot[src_lin] == -1, (
+                    f"rank {src} would send twice in merged skew "
+                    f"permutation (operand={operand}, dest slot {ds})")
+                send_slot[src_lin] = k % n_slots
+                perm.append((src_lin, i * qy + j))
+        assert all(s >= 0 for s in send_slot)
+        sel = jnp.asarray(send_slot)[coords]
+        payload = lax.dynamic_index_in_dim(stacked, sel, 0, keepdims=False)
+        out.append(lax.ppermute(payload, g.axes, perm))
     return out
 
 
@@ -79,8 +112,18 @@ def _default_mm(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.matmul(a, b, preferred_element_type=jnp.float32)
 
 
+def _make_mm_acc(local_matmul: Callable | None,
+                 local_matmul_acc: Callable | None) -> Callable:
+    """``(a, b, c) -> c + a @ b`` from whichever kernel the caller gave."""
+    if local_matmul_acc is not None:
+        return local_matmul_acc
+    mm = local_matmul or _default_mm
+    return lambda a, b, c: c + mm(a, b)
+
+
 def summa_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
                  *, local_matmul: Callable | None = None,
+                 local_matmul_acc: Callable | None = None,
                  row_axis: str = "x", col_axis: str = "y") -> jax.Array:
     """SUMMA on a q_x × q_y process grid.
 
@@ -97,7 +140,7 @@ def summa_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
     Per-process cost: L row-broadcasts of (n/q_x × n/L) + L column-broadcasts
     of (n/L × n/q_y) + the same 2n³/p flops as every variant.
     """
-    mm = local_matmul or _default_mm
+    mm_acc = _make_mm_acc(local_matmul, local_matmul_acc)
     qx, qy = mesh.shape[row_axis], mesh.shape[col_axis]
     L = math.lcm(qx, qy)
     n_k = A.shape[1]
@@ -112,7 +155,7 @@ def summa_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
             b_off = (k % (L // qx)) * w
             a_k = g.bcast_row(a_blk[:, a_off:a_off + w], k // (L // qy))
             b_k = g.bcast_col(b_blk[b_off:b_off + w, :], k // (L // qx))
-            c = c + mm(a_k, b_k)
+            c = mm_acc(a_k, b_k, c)
         return c
 
     fn = spmd(body, mesh,
@@ -123,6 +166,7 @@ def summa_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
 
 def cannon_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
                   *, local_matmul: Callable | None = None,
+                  local_matmul_acc: Callable | None = None,
                   row_axis: str = "x", col_axis: str = "y") -> jax.Array:
     """Cannon's algorithm on a q_x × q_y grid (square or rectangular).
 
@@ -136,7 +180,7 @@ def cannon_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
     steps: A's local block is a window of L/q_y panels consumed in order,
     ring-shifted one block every L/q_y steps (and symmetrically for B).
     """
-    mm = local_matmul or _default_mm
+    mm_acc = _make_mm_acc(local_matmul, local_matmul_acc)
     qx, qy = mesh.shape[row_axis], mesh.shape[col_axis]
     L = math.lcm(qx, qy)
     assert A.shape[1] % L == 0 and A.shape[1] == B.shape[0], (A.shape, B.shape, L)
@@ -150,7 +194,7 @@ def cannon_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
         b_slots = _skew_panels(g, b_slots, qx=qx, qy=qy, L=L, operand="B")
         c = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
         for t in range(L):
-            c = c + mm(a_slots[t % len(a_slots)], b_slots[t % len(b_slots)])
+            c = mm_acc(a_slots[t % len(a_slots)], b_slots[t % len(b_slots)], c)
             if t == L - 1:
                 break
             if (t + 1) % len(a_slots) == 0:   # window exhausted: pull from j+1
@@ -167,17 +211,18 @@ def cannon_matmul(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
 
 def summa_matmul_pallas(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
                         *, interpret: bool = True) -> jax.Array:
-    """SUMMA with the Pallas MXU kernel as the local multiply."""
-    from repro.kernels.ops import matmul as pallas_matmul
+    """SUMMA with the accumulate-in-place Pallas MXU kernel (the per-panel
+    ``C += A_k B_k`` never materializes a separate product temporary)."""
+    from repro.kernels.ops import matmul_acc
 
     return summa_matmul(A, B, mesh,
-                        local_matmul=partial(pallas_matmul, interpret=interpret))
+                        local_matmul_acc=partial(matmul_acc, interpret=interpret))
 
 
 def cannon_matmul_pallas(A: jax.Array, B: jax.Array, mesh: jax.sharding.Mesh,
                          *, interpret: bool = True) -> jax.Array:
-    """Cannon with the Pallas MXU kernel as the local multiply."""
-    from repro.kernels.ops import matmul as pallas_matmul
+    """Cannon with the accumulate-in-place Pallas MXU kernel."""
+    from repro.kernels.ops import matmul_acc
 
     return cannon_matmul(A, B, mesh,
-                         local_matmul=partial(pallas_matmul, interpret=interpret))
+                         local_matmul_acc=partial(matmul_acc, interpret=interpret))

@@ -30,6 +30,55 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, out_dtype):
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
+def _matmul_acc_kernel(a_ref, b_ref, cin_ref, o_ref, acc_ref, *, k_steps: int,
+                       out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = cin_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul_acc_pallas(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                      bm: int = 256, bn: int = 256, bk: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """C + A @ B accumulated *in place*: the VMEM accumulator initializes
+    from the C tile instead of zeros and the C buffer is aliased to the
+    output (``input_output_aliases``), so a k-panel loop
+    ``c = matmul_acc(a_k, b_k, c)`` updates one (m, n) buffer per step
+    rather than materializing a separate A@B product temporary and adding.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), (a.shape, b.shape, c.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+
+    kernel = functools.partial(_matmul_acc_kernel, k_steps=k_steps,
+                               out_dtype=c.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(a, b, c)
+
+
 def matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
                   bk: int = 512, out_dtype=jnp.float32,
                   interpret: bool = False) -> jax.Array:

@@ -11,7 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .matmul import matmul_pallas
+from .matmul import matmul_acc_pallas, matmul_pallas
 from .minplus import minplus_pallas
 from .flash_attention import flash_attention_pallas
 
@@ -26,6 +26,14 @@ def matmul(a, b, *, bm=256, bn=256, bk=512, out_dtype=jnp.float32,
            interpret: bool | None = None):
     return matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
                          interpret=_auto_interpret(interpret))
+
+
+def matmul_acc(a, b, c, *, bm=256, bn=256, bk=512,
+               interpret: bool | None = None):
+    """In-place ``c + a @ b`` (c's buffer is aliased to the output — donate
+    c under jit, i.e. never reuse it after the call)."""
+    return matmul_acc_pallas(a, b, c, bm=bm, bn=bn, bk=bk,
+                             interpret=_auto_interpret(interpret))
 
 
 def minplus(a, b, *, bm=256, bn=256, bk=256, uk=8, interpret: bool | None = None):

@@ -90,10 +90,26 @@ def matmul_scenarios_table(n: int, p: int, bytes_per_elt: int = 2) -> str:
         rows.append(f"| SUMMA (2D) | {q2}² | {c['total_s']:.4g} | {eff(c):.3f} | "
                     f"{c['mem_elts_per_proc']} | "
                     f"{costmodel.isoefficiency_matmul_summa(p):.3g} |")
+        c = costmodel.summa_pipelined_cost(n, q2, bytes_per_elt=bytes_per_elt)
+        rows.append(f"| SUMMA-pipelined (2D, overlap) | {q2}² | "
+                    f"{c['total_s']:.4g} | {eff(c):.3f} | "
+                    f"{c['mem_elts_per_proc']} | "
+                    f"{costmodel.isoefficiency_matmul_cannon(p):.3g} |")
         c = costmodel.cannon_matmul_cost(n, q2, bytes_per_elt=bytes_per_elt)
         rows.append(f"| Cannon (2D) | {q2}² | {c['total_s']:.4g} | {eff(c):.3f} | "
                     f"{c['mem_elts_per_proc']} | "
                     f"{costmodel.isoefficiency_matmul_cannon(p):.3g} |")
+    # 2.5D: the largest replication factor c with p = q²c, c | q fixes (q, c)
+    for c25 in sorted({d for d in range(2, p + 1) if p % d == 0}, reverse=True):
+        q25 = round(math.isqrt(p // c25))
+        if q25 * q25 * c25 == p and c25 <= q25 and q25 % c25 == 0 \
+                and n % q25 == 0:
+            c = costmodel.cannon_25d_cost(n, q25, c25, bytes_per_elt=bytes_per_elt)
+            rows.append(f"| Cannon-2.5D (×{c25} replicated) | {q25}²×{c25} | "
+                        f"{c['total_s']:.4g} | {eff(c):.3f} | "
+                        f"{c['mem_elts_per_proc']} | "
+                        f"{costmodel.isoefficiency_matmul_25d(p, c25):.3g} |")
+            break
     rows.append(f"| generic (1D, Alg. 1) | {p} | — | — | — | "
                 f"{costmodel.isoefficiency_matmul_generic(p):.3g} |")
     return "\n".join(rows)

@@ -74,6 +74,88 @@ def test_summa_cannon_cost_structure(n, q):
     assert s["mem_elts_per_proc"] * q * q == 3 * n * n
 
 
+@pytest.mark.parametrize("n,qx,qy", [(256, 2, 4), (1024, 2, 2), (1024, 2, 4),
+                                     (1024, 1, 8), (4096, 2, 8), (8192, 4, 8)])
+def test_summa_pipelined_leq_plain(n, qx, qy):
+    """Overlap pipelining never loses where it is meant to run: the ring
+    transfers replace log-tree broadcasts and hide behind compute, so
+    pipelined total ≤ plain SUMMA total (same flops, same memory class).
+    (On large square comm-bound grids the tree's log q beats a q-hop serial
+    ring — there the chooser keeps plain SUMMA or Cannon.)"""
+    s = cm.summa_matmul_cost(n, qx, qy)
+    p = cm.summa_pipelined_cost(n, qx, qy)
+    assert p["compute_s"] == pytest.approx(s["compute_s"])
+    assert p["total_s"] <= s["total_s"] * (1 + 1e-9), (p, s)
+    # the overlap term is exactly what max() saved over the serial sum
+    assert p["overlap_s"] == pytest.approx(
+        p["comm_s"] + p["compute_s"] - max(p["comm_s"], p["compute_s"]))
+
+
+@pytest.mark.parametrize("n,q,c", [(8192, 16, 4), (8192, 32, 4), (4096, 16, 4)])
+def test_cannon_25d_between_cannon_and_dns(n, q, c):
+    """2.5D interpolates the memory/communication tradeoff: with p = q²c
+    chips, per-process memory sits strictly between Cannon's Θ(n²/p) and
+    DNS's Θ(n²/p^{2/3}) (for 1 < c < p^{1/3}), and the c-fold replication
+    buys strictly less communication than Cannon on the same chip count."""
+    d25 = cm.cannon_25d_cost(n, q, c)
+    p = d25["p"]
+    q2 = round(p ** 0.5)
+    assert q2 * q2 == p, "test params must give a square 2D grid"
+    ca = cm.cannon_matmul_cost(n, q2)
+    q3 = round(p ** (1 / 3))
+    dns_mem = 3 * (n // q3) ** 2 if q3**3 == p else None
+    assert ca["mem_elts_per_proc"] < d25["mem_elts_per_proc"]
+    assert d25["mem_elts_per_proc"] == 3 * c * n * n // p
+    if dns_mem is not None and c < q3:
+        assert d25["mem_elts_per_proc"] < dns_mem
+    assert d25["comm_s"] < ca["shift_s"], (d25, ca)
+    # same useful work on the same chip count
+    assert d25["compute_s"] == pytest.approx(ca["compute_s"])
+
+
+def test_cannon_25d_tradeoff_monotone_in_c():
+    """More replication -> more memory, less communication (up to the
+    reduce-dominated c = q corner, which is excluded)."""
+    n, q = 8192, 32
+    cs = [1, 2, 4, 8]
+    costs = [cm.cannon_25d_cost(n, q, c) for c in cs]
+    for lo, hi in zip(costs, costs[1:]):
+        assert hi["comm_s"] < lo["comm_s"]
+        assert hi["mem_elts_per_proc"] == lo["mem_elts_per_proc"]  # fixed q
+    # at fixed p, memory grows with c: 3·c·n²/p
+    assert cm.cannon_25d_cost(n, 16, 4)["mem_elts_per_proc"] > \
+        cm.cannon_matmul_cost(n, 32)["mem_elts_per_proc"]
+
+
+def test_cannon_25d_c1_matches_cannon():
+    """c = 1 is plain square Cannon: no replication broadcast, no reduce,
+    identical skew + ring-shift communication structure."""
+    n, q = 4096, 8
+    d = cm.cannon_25d_cost(n, q, 1)
+    ca = cm.cannon_matmul_cost(n, q)
+    assert d["replicate_s"] == 0.0 and d["reduce_s"] == 0.0
+    assert d["comm_s"] == pytest.approx(ca["shift_s"])
+    assert d["total_s"] == pytest.approx(ca["total_s"])
+
+
+@pytest.mark.parametrize("p", [64, 512, 4096])
+def test_isoefficiency_25d_interpolates(p):
+    """W(p, c) = (p/c)^{3/2}: c = 1 recovers Cannon; growing c walks down
+    toward the replication-bought DNS end of the scalability curve."""
+    assert cm.isoefficiency_matmul_25d(p, 1) == \
+        pytest.approx(cm.isoefficiency_matmul_cannon(p))
+    c_max = round(p ** (1 / 3))
+    prev = cm.isoefficiency_matmul_25d(p, 1)
+    for c in (2, 4):
+        if c > c_max:
+            break
+        cur = cm.isoefficiency_matmul_25d(p, c)
+        assert cur < prev
+        prev = cur
+    # never below the embarrassingly-parallel floor W ∈ Θ(p)
+    assert cm.isoefficiency_matmul_25d(p, c_max) >= p * (1 - 1e-9)
+
+
 def test_summa_cost_rectangular():
     """Rectangular grids: p is q_x·q_y and panel maths stays consistent."""
     s = cm.summa_matmul_cost(1024, 2, 4)

@@ -26,6 +26,40 @@ def test_matmul_kernel(m, k, n, bm, bn, bk, dtype):
                                rtol=tol, atol=tol * 10)
 
 
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 256, 128, 128, 256),
+    (64, 64, 64, 64, 64, 64),
+])
+def test_matmul_acc_kernel(m, k, n, bm, bn, bk):
+    """matmul_acc(a, b, c) == c + a @ b, with the accumulator seeded from c."""
+    a = jnp.array(rng.randn(m, k), np.float32)
+    b = jnp.array(rng.randn(k, n), np.float32)
+    c = jnp.array(rng.randn(m, n), np.float32)
+    got = ops.matmul_acc(a, b, c, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = c + ref.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_acc_no_temporary():
+    """The accumulate variant is one aliased pallas_call: c's buffer IS the
+    output (input_output_aliases) and no separate A@B product + add appears
+    in the jaxpr — the per-panel temporary of `c + matmul(a, b)` is gone."""
+    x = jnp.ones((128, 128), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, c: ops.matmul_acc(a, b, c, interpret=True))(x, x, x)
+    prims = [e.primitive.name for e in jaxpr.jaxpr.eqns]
+    assert prims == ["pallas_call"], prims
+    aliases = jaxpr.jaxpr.eqns[0].params["input_output_aliases"]
+    assert tuple(aliases) == ((2, 0),), aliases
+    # the unfused form materializes the product: pallas_call + add
+    jaxpr_unfused = jax.make_jaxpr(
+        lambda a, b, c: c + ops.matmul(a, b, interpret=True))(x, x, x)
+    prims_unfused = [e.primitive.name for e in jaxpr_unfused.jaxpr.eqns]
+    assert "add" in prims_unfused, prims_unfused
+
+
 @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 64, 128), (64, 256, 64)])
 @pytest.mark.parametrize("uk", [4, 8])
 def test_minplus_kernel(m, k, n, uk):

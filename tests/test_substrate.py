@@ -111,8 +111,9 @@ def test_checkpoint_async_and_latest(tmp_path):
 # ---------------------------------------------------------------------------
 def test_watchdog_detects_straggler():
     w = StepWatchdog(k=6.0, min_steps=5)
-    for _ in range(20):
-        assert not w.observe(0.1 + np.random.rand() * 0.001)
+    jitter = np.random.RandomState(0)  # seeded: unseeded draws can cluster
+    for _ in range(20):                # tightly and turn the 6-MAD gate flaky
+        assert not w.observe(0.1 + jitter.rand() * 0.001)
     assert w.observe(1.0)
 
 
