@@ -18,8 +18,10 @@ import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 MATMUL_JSON = os.path.join(HERE, "..", "BENCH_matmul.json")
+SERVE_JSON = os.path.join(HERE, "..", "BENCH_serve.json")
 SUBPROCESS_BENCHES = ["_op_costs.py", "_matmul_efficiency.py",
-                      "_summa_vs_dns.py", "_floyd_warshall.py", "_lm_step.py"]
+                      "_summa_vs_dns.py", "_floyd_warshall.py", "_lm_step.py",
+                      "_serve_throughput.py"]
 
 
 def _isoefficiency() -> None:
@@ -63,6 +65,27 @@ def _write_matmul_json(lines: list) -> None:
             f.write("\n")
 
 
+def _write_serve_json(lines: list) -> None:
+    """Machine-readable serving A/B (BENCH_serve.json at the repo root,
+    diffable across PRs like BENCH_matmul.json): mode -> measured us/tok,
+    tok/s and the decode_step_cost-predicted tok/s."""
+    pat = re.compile(r"^serve_(\w+),(\d+),tok_s=([\d.]+);model_tok_s=([\d.]+)"
+                     r";slots=(\d+)")
+    table = {}
+    for line in lines:
+        m = pat.match(line)
+        if not m:
+            continue
+        table[m.group(1)] = {"us_per_tok": int(m.group(2)),
+                             "tok_s": float(m.group(3)),
+                             "model_tok_s": float(m.group(4)),
+                             "slots": int(m.group(5))}
+    if table:
+        with open(SERVE_JSON, "w") as f:
+            json.dump(table, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
 def main() -> None:
     only = None
     if "--only" in sys.argv:
@@ -74,6 +97,7 @@ def main() -> None:
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     matmul_lines = []
+    serve_lines = []
     for bench in SUBPROCESS_BENCHES if only is None else [only]:
         r = subprocess.run([sys.executable, os.path.join(HERE, bench)],
                            capture_output=True, text=True, env=env,
@@ -86,7 +110,10 @@ def main() -> None:
                 print(line)
                 if line.startswith("summa_vs_dns_"):
                     matmul_lines.append(line)
+                elif line.startswith("serve_"):
+                    serve_lines.append(line)
     _write_matmul_json(matmul_lines)
+    _write_serve_json(serve_lines)
 
 
 if __name__ == "__main__":

@@ -164,6 +164,52 @@ def model_flops_decode(n_params_active: float, tokens: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Serving-path costs (scheduler + roofline --serve).
+# ---------------------------------------------------------------------------
+def decode_step_cost(n_params_active: float, batch: int, kv_bytes: float = 0.0,
+                     *, chips: int = 1, bytes_per_param: int = 2,
+                     overhead_s: float = 0.0,
+                     peak_flops: float = PEAK_FLOPS_BF16,
+                     hbm_bw: float = HBM_BW) -> dict:
+    """One batched decode step: every chip streams its parameter shard once
+    (plus each sequence's KV/state cache, ``kv_bytes`` per sequence) while
+    doing 2·N·B flops — the classic batch-amortized memory-bound regime.
+    ``overhead_s`` is a fixed per-step dispatch floor (host-driven engines).
+    Returns the roofline terms plus the predicted aggregate tok/s."""
+    compute = 2.0 * n_params_active * batch / (chips * peak_flops)
+    memory = (n_params_active * bytes_per_param + batch * kv_bytes) / (chips * hbm_bw)
+    total = max(compute, memory) + overhead_s
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "dominant": "compute_s" if compute >= memory else "memory_s",
+        "total_s": total,
+        "tok_s": batch / total if total > 0 else float("inf"),
+    }
+
+
+def prefill_cost(n_params_active: float, prompt_tokens: float, *,
+                 chips: int = 1, bytes_per_param: int = 2,
+                 peak_flops: float = PEAK_FLOPS_BF16,
+                 hbm_bw: float = HBM_BW) -> dict:
+    """Fused prefill of ``prompt_tokens`` (batch × prompt length) in one
+    full-sequence forward: 2·N flops per token against one parameter stream —
+    compute-bound for any real prompt, which is exactly why the scheduler
+    prefers one fused call over a prompt-length loop of decode steps (the
+    loop pays the decode memory bound ``prompt_len`` times)."""
+    compute = 2.0 * n_params_active * prompt_tokens / (chips * peak_flops)
+    memory = n_params_active * bytes_per_param / (chips * hbm_bw)
+    total = max(compute, memory)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "dominant": "compute_s" if compute >= memory else "memory_s",
+        "total_s": total,
+        "tok_s": prompt_tokens / total if total > 0 else float("inf"),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Isoefficiency (paper §2, §4.2.1, §4.3): W = K * T_o(W, p).
 # ---------------------------------------------------------------------------
 def efficiency(t_serial: float, t_parallel: float, p: int) -> float:

@@ -87,7 +87,9 @@ def lower_cell(arch: str, shape_name: str, mesh, pcfg=None, cfg_override=None):
         params = jax.eval_shape(partial(_init_params, cfg=cfg))
         psh = to_shardings(param_specs(params, cfg, ctx), mesh)
         fn = S.make_prefill_step(cfg, pcfg, ctx)
-        jitted = jax.jit(fn, in_shardings=(psh,) + cell.in_shardings)
+        # donate the cache (args: params, batch, cache) — written in-pass
+        jitted = jax.jit(fn, in_shardings=(psh,) + cell.in_shardings,
+                         donate_argnums=(2,))
         lowered = jitted.lower(params, *cell.abstract_args)
     else:  # decode
         params = jax.eval_shape(partial(_init_params, cfg=cfg))

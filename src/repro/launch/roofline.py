@@ -7,6 +7,11 @@ bottleneck, MODEL_FLOPS ratio, and a one-line recommendation).
 Also hosts the parallel-matmul scenario table (paper §4 + the 2D family):
 
   PYTHONPATH=src python -m repro.launch.roofline --matmul n=8192,p=64
+
+and the serving-path table (continuous-batching scheduler vs naive, from
+``costmodel.decode_step_cost`` / ``prefill_cost``):
+
+  PYTHONPATH=src python -m repro.launch.roofline --serve arch=llama3.2-3b,prompt=2048,gen=256,chips=16
 """
 from __future__ import annotations
 
@@ -115,8 +120,73 @@ def matmul_scenarios_table(n: int, p: int, bytes_per_elt: int = 2) -> str:
     return "\n".join(rows)
 
 
+def kv_bytes_per_seq(cfg, seq: int) -> float:
+    """Per-sequence decode-cache traffic: attention KV (bf16, window-capped)
+    plus the recurrent-state leaves (conv window + f32 SSM/mLSTM state)."""
+    kv_len = min(seq, cfg.window) if cfg.window else seq
+    kv_line = 2 * kv_len * cfg.n_kv_heads * cfg.hd * 2          # k+v, bf16
+    if cfg.enc_dec:
+        return cfg.n_layers * kv_line
+    total = 0.0
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "attn_moe"):
+            total += kv_line
+        elif kind in ("mamba2", "mamba2_attn"):
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            total += (s.conv_width - 1) * (d_in + 2 * s.d_state) * 2
+            total += (d_in // s.head_dim) * s.d_state * s.head_dim * 4
+            if kind == "mamba2_attn":
+                total += kv_line
+        elif kind == "mlstm":
+            d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+            hd = d_in // cfg.n_heads
+            total += cfg.n_heads * hd * (hd + 1) * 4
+        elif kind == "slstm":
+            total += 3 * cfg.d_model * 4
+    return total * cfg.n_periods
+
+
+def serve_table(arch: str, prompt: int, gen: int, chips: int = 1) -> str:
+    """Predicted serving throughput/latency of the continuous-batching
+    scheduler at growing slot counts vs the naive one-slot server: decode is
+    batch-amortized memory-bound (params stream once per step regardless of
+    batch), so tok/s climbs near-linearly until KV traffic or the MXU takes
+    over — the model the BENCH_serve.json A/B is checked against."""
+    from repro import configs
+    cfg = configs.get(arch)
+    n_active = cfg.param_counts()["active"]
+    kv = kv_bytes_per_seq(cfg, prompt + gen)
+    pre = costmodel.prefill_cost(n_active, prompt, chips=chips)
+    naive = costmodel.decode_step_cost(n_active, 1, kv, chips=chips)
+    rows = [f"| slots | step_compute_s | step_memory_s | dominant | tok/s | "
+            f"request latency_s | speedup vs 1 |", "|---|---|---|---|---|---|---|"]
+    for b in (1, 8, 32, 128, 512):
+        c = costmodel.decode_step_cost(n_active, b, kv, chips=chips)
+        lat = pre["total_s"] + gen * c["total_s"]
+        rows.append(
+            f"| {b} | {c['compute_s']:.3e} | {c['memory_s']:.3e} | "
+            f"{c['dominant'].replace('_s', '')} | {c['tok_s']:.1f} | "
+            f"{lat:.3f} | {c['tok_s'] / naive['tok_s']:.1f}× |")
+    rows.append(f"(prefill {prompt} toks: {pre['total_s'] * 1e3:.2f} ms fused "
+                f"vs {prompt * naive['total_s'] * 1e3:.2f} ms as a decode "
+                f"loop — {cfg.name}, {chips} chip(s))")
+    return "\n".join(rows)
+
+
 def main():
     args = sys.argv[1:]
+    if args and args[0] == "--serve":
+        try:
+            kv = dict(s.split("=") for s in args[1].split(",")) if len(args) > 1 else {}
+            arch = kv.get("arch", "llama3.2-3b")
+            prompt, gen = int(kv.get("prompt", 2048)), int(kv.get("gen", 256))
+            chips = int(kv.get("chips", 1))
+        except ValueError:
+            raise SystemExit(
+                "usage: roofline --serve arch=<name>,prompt=<len>,gen=<len>,chips=<n>")
+        print(serve_table(arch, prompt, gen, chips))
+        return
     if args and args[0] == "--matmul":
         try:
             kv = dict(s.split("=") for s in args[1].split(",")) if len(args) > 1 else {}

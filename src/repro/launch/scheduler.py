@@ -1,0 +1,248 @@
+"""Slot-based continuous-batching decode scheduler (the serving subsystem).
+
+Design (ROADMAP "real-traffic serving path"):
+
+  * A fixed pool of ``slots`` cache rows backs one fixed-shape jitted decode
+    step ``decode(params, tok (B,), cache, pos (B,))``: the per-slot position
+    vector lets every request advance independently, so new requests join and
+    finished ones leave mid-flight without retracing.
+  * Admission: when a slot is free and a request has arrived, its prompt runs
+    as ONE fused cache-writing prefill call (``parallel.steps.
+    make_prefill_step``) on a bucketed right-padded (1, Lb) batch — causal
+    masking makes end-padding invisible — and the resulting cache rows are
+    scattered into the slot.  Recurrent-family patterns (mamba2 / mlstm /
+    slstm) absorb pad tokens into their state, so they fall back to a B=1
+    per-token prefill loop instead.
+  * Eviction: after ``gen`` greedy tokens the slot returns to the free list;
+    a parked slot keeps riding the batched step (fixed shapes) but its writes
+    land at its frozen position, which the next occupant either overwrites at
+    prefill or hides behind the causal mask until decode overtakes it.
+  * Arrivals are measured in engine ticks (decode steps), giving a
+    deterministic, machine-independent arrival process; wall-clock is used
+    only for the reported latency/throughput metrics.
+
+Slots are end-aligned (no ring reuse): ``prompt_len + gen <= max_len`` per
+request, and ``max_len <= cfg.window`` for sliding-window archs.
+
+The naive one-request-at-a-time server is this same engine with ``slots=1``
+— the A/B in ``benchmarks/_serve_throughput.py`` isolates exactly the
+continuous-batching win.  Cost-model predictions for both sides come from
+``costmodel.decode_step_cost`` / ``prefill_cost`` (``roofline --serve``).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import transformer as T
+from repro.parallel import steps as S
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: Sequence[int]          # token ids; may be empty (generate from BOS)
+    gen: int                       # tokens to generate, >= 1
+    arrival: int = 0               # engine tick at which the request appears
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    arrival: int
+    admitted_tick: int
+    done_tick: int
+    admitted_s: float              # wall seconds from run start
+    first_token_s: float           # wall seconds from run start
+    done_s: float
+
+    @property
+    def ttft_s(self) -> float:
+        """Admission → first token (prefill latency; queue wait is virtual
+        ticks, so pre-admission wall time is not a serving latency)."""
+        return self.first_token_s - self.admitted_s
+
+
+@dataclass
+class _Slot:
+    req: Request
+    tokens: List[int] = field(default_factory=list)
+    admitted_tick: int = 0
+    admitted_s: float = 0.0
+    first_token_s: float = 0.0
+
+
+class Scheduler:
+    """Continuous-batching greedy-decode engine over a fixed slot pool."""
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, params, *,
+                 slots: int = 4, max_len: int = 256, bucket: int = 16,
+                 bos: int = 0, ctx=None):
+        if cfg.enc_dec:
+            raise NotImplementedError("enc-dec serving is not scheduled yet")
+        if slots < 1 or max_len < 2:
+            raise ValueError(f"need slots >= 1 and max_len >= 2, got "
+                             f"{slots}/{max_len}")
+        if cfg.window is not None and max_len > cfg.window:
+            raise NotImplementedError(
+                f"slots are end-aligned: max_len {max_len} must fit the "
+                f"attention window {cfg.window}")
+        self.cfg, self.pcfg, self.params, self.ctx = cfg, pcfg, params, ctx
+        self.slots, self.max_len = slots, max_len
+        self.bucket, self.bos = max(1, bucket), bos
+        self.fused = T.supports_fused_prefill(cfg)
+        self._decode = jax.jit(S.make_decode_step(cfg, pcfg, ctx),
+                               donate_argnums=(2,))
+        self._prefill = jax.jit(S.make_prefill_step(cfg, pcfg, ctx),
+                                donate_argnums=(2,)) if self.fused else None
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh cache + slot state (jit caches survive — use for warmup)."""
+        self.cache = T.init_cache(self.cfg, self.slots, self.max_len)
+        self._tok = np.zeros((self.slots,), np.int32)
+        self._pos = np.zeros((self.slots,), np.int32)
+
+    @staticmethod
+    def _insert_impl(big, small, slot):
+        return jax.tree.map(
+            lambda bg, sm: lax.dynamic_update_slice(
+                bg, sm.astype(bg.dtype), (0, slot) + (0,) * (bg.ndim - 2)),
+            big, small)
+
+    # ------------------------------------------------------------------
+    def _bucketed(self, n: int) -> int:
+        return min(self.max_len, -(-n // self.bucket) * self.bucket)
+
+    def _admit(self, req: Request, slot: int) -> Optional[int]:
+        """Prefill ``req``'s prompt into ``slot``; returns its first greedy
+        token (None for an empty prompt — the first token then comes from the
+        next decode step, fed from BOS).  Leaves ``_tok``/``_pos`` pointing at
+        the next decode input."""
+        prompt = np.asarray(req.prompt, np.int32)
+        lp = int(prompt.shape[0])
+        if lp + req.gen > self.max_len:
+            raise ValueError(f"request {req.rid}: prompt {lp} + gen {req.gen} "
+                             f"exceeds max_len {self.max_len}")
+        if lp == 0:
+            # no prompt: greedy generation starts from BOS at position 0 on a
+            # fresh cache row — recurrent state leaves have no position
+            # indexing, so the previous occupant's state must be zeroed (the
+            # lp > 0 paths overwrite it via their prefill insert)
+            self.cache = self._insert(self.cache,
+                                      T.init_cache(self.cfg, 1, self._bucketed(1)),
+                                      jnp.int32(slot))
+            self._tok[slot], self._pos[slot] = self.bos, 0
+            return None
+        if self.fused:
+            lb = self._bucketed(lp)
+            toks = np.zeros((1, lb), np.int32)
+            toks[0, :lp] = prompt
+            batch = {"tokens": jnp.asarray(toks),
+                     "length": jnp.asarray([lp], jnp.int32)}
+            logits, row = self._prefill(self.params, batch,
+                                        T.init_cache(self.cfg, 1, lb))
+            first = int(jnp.argmax(logits, axis=-1)[0])
+        else:
+            # recurrent state absorbs padding: unpadded per-token loop (B=1;
+            # jit retraces per shape, so this reuses the decode step fn)
+            row = T.init_cache(self.cfg, 1, self._bucketed(lp))
+            nxt = None
+            for i in range(lp):
+                nxt, row = self._decode(self.params,
+                                        jnp.asarray(prompt[i:i + 1]), row,
+                                        jnp.int32(i))
+            first = int(nxt[0])
+        self.cache = self._insert(self.cache, row, jnp.int32(slot))
+        self._tok[slot], self._pos[slot] = first, lp
+        return first
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], *,
+            on_token: Optional[Callable[[int, int], None]] = None) -> dict:
+        """Serve ``requests`` to completion.  Greedy tokens stream per request
+        through ``on_token(rid, token)`` (one host sync per engine tick).
+        Returns completions plus aggregate wall-time / throughput metrics."""
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        active: Dict[int, _Slot] = {}
+        free = list(range(self.slots - 1, -1, -1))
+        done: Dict[int, Completion] = {}
+        generated = 0
+        tick = 0
+        t0 = time.perf_counter()
+
+        def finish(slot: int) -> None:
+            st = active.pop(slot)
+            free.append(slot)
+            done[st.req.rid] = Completion(
+                rid=st.req.rid, tokens=st.tokens, arrival=st.req.arrival,
+                admitted_tick=st.admitted_tick, done_tick=tick,
+                admitted_s=st.admitted_s, first_token_s=st.first_token_s,
+                done_s=time.perf_counter() - t0)
+
+        def emit(slot: int, tok: int) -> None:
+            nonlocal generated
+            st = active[slot]
+            if not st.tokens:
+                st.first_token_s = time.perf_counter() - t0
+            st.tokens.append(tok)
+            generated += 1
+            if on_token is not None:
+                on_token(st.req.rid, tok)
+
+        while pending or active:
+            while pending and free and pending[0].arrival <= tick:
+                req = pending.popleft()
+                slot = free.pop()
+                st = _Slot(req=req, admitted_tick=tick,
+                           admitted_s=time.perf_counter() - t0)
+                active[slot] = st
+                first = self._admit(req, slot)
+                if first is not None:
+                    emit(slot, first)
+                    if len(st.tokens) >= req.gen:
+                        finish(slot)
+            if not active:
+                # nothing resident: fast-forward the virtual clock
+                tick = pending[0].arrival if pending else tick + 1
+                continue
+            nxt, self.cache = self._decode(self.params, jnp.asarray(self._tok),
+                                           self.cache, jnp.asarray(self._pos))
+            nxt = np.asarray(nxt)               # host sync = the stream point
+            tick += 1
+            for slot in list(active):
+                self._pos[slot] += 1
+                self._tok[slot] = nxt[slot]
+                emit(slot, int(nxt[slot]))
+                if len(active[slot].tokens) >= active[slot].req.gen:
+                    finish(slot)
+        jax.block_until_ready(self.cache)
+        wall = time.perf_counter() - t0
+        return {
+            "completions": done,
+            "generated": generated,
+            "ticks": tick,
+            "wall_s": wall,
+            "tok_s": generated / wall if wall > 0 else float("inf"),
+        }
+
+
+def make_requests(n: int, prompt_len: int, gen: int, vocab: int, *,
+                  stagger: int = 0, seed: int = 1) -> List[Request]:
+    """Uniform synthetic request stream: ``n`` requests of ``prompt_len``
+    random prompt tokens, ``gen`` outputs, arriving ``stagger`` ticks apart."""
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, vocab, (prompt_len,)).astype(np.int32),
+                    gen=gen, arrival=i * stagger)
+            for i in range(n)]

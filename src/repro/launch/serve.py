@@ -1,26 +1,29 @@
-"""Serving launcher: batched prefill + decode loop (example application).
+"""Serving launcher: thin CLI over the continuous-batching scheduler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --requests 4 \
-      --prompt-len 32 --gen 16
+      --prompt-len 32 --gen 16 --slots 4 --stagger 2
 
 Runs a reduced config on CPU; the same driver serves the production mesh.
-Requests are batched; prefill fills the KV cache (per-token loop kept simple
-here — a production server would use the fused prefill path), then greedy
-decode streams tokens.
+Each prompt is prefilled in ONE fused cache-writing forward (recurrent
+families fall back to a per-token loop), then requests share a fixed slot
+pool: staggered arrivals are admitted into free slots mid-flight, finished
+requests evicted, greedy tokens streamed per request
+(``launch/scheduler.py``).  ``--naive`` serves one request at a time
+(slots=1) for an A/B against the batched engine.  A warmup pass runs first
+so JIT compile time never lands in the reported tok/s, and every timing
+reads after ``jax.block_until_ready``.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.config import ParallelConfig
+from repro.launch.scheduler import Scheduler, make_requests
 from repro.launch.train import reduced
 from repro.models import transformer as T
-from repro.parallel import steps as S
 
 
 def main():
@@ -29,7 +32,20 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks (decode steps) between request arrivals")
+    ap.add_argument("--naive", action="store_true",
+                    help="one-request-at-a-time baseline (slots=1)")
     args = ap.parse_args()
+    if args.requests < 1 or args.gen < 1:
+        ap.error(f"--requests and --gen must be >= 1 "
+                 f"(got {args.requests}/{args.gen})")
+    if args.prompt_len < 0 or args.slots < 1 or args.stagger < 0:
+        ap.error("--prompt-len/--stagger must be >= 0 and --slots >= 1")
+    if args.prompt_len + args.gen < 2:
+        ap.error("--prompt-len + --gen must be >= 2 (the slot pool needs a "
+                 "cache of at least two positions)")
 
     cfg = reduced(configs.get(args.arch))
     if cfg.enc_dec:
@@ -37,35 +53,32 @@ def main():
     pcfg = ParallelConfig(remat="none", fsdp_params=False)
     params = T.init(jax.random.PRNGKey(0), cfg)
 
-    b = args.requests
+    slots = 1 if args.naive else args.slots
     max_len = args.prompt_len + args.gen
-    rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (b, args.prompt_len), 0, cfg.vocab)
+    if cfg.window is not None and max_len > cfg.window:
+        raise SystemExit(f"prompt+gen {max_len} exceeds the reduced "
+                         f"attention window {cfg.window}")
+    sched = Scheduler(cfg, pcfg, params, slots=slots, max_len=max_len)
 
-    decode = jax.jit(S.make_decode_step(cfg, pcfg, None), donate_argnums=(2,))
-    cache = T.init_cache(cfg, b, max_len)
+    # warmup: compile prefill/decode/insert outside the timed run
+    sched.run(make_requests(min(2, args.requests), args.prompt_len,
+                            min(2, args.gen), cfg.vocab))
+    sched.reset()
 
-    # prefill: feed prompt tokens through the decode path (cache warm-up)
-    t0 = time.time()
-    tok = prompts[:, 0]
-    for i in range(args.prompt_len):
-        nxt, cache = decode(params, prompts[:, i], cache, jnp.int32(i))
-    t_prefill = time.time() - t0
-
-    out = []
-    t0 = time.time()
-    tok = nxt
-    for i in range(args.gen):
-        out.append(tok)
-        tok, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i))
-    jax.block_until_ready(tok)
-    t_gen = time.time() - t0
-
-    gen = jnp.stack(out, axis=1)
-    print(f"served {b} requests: prefill {args.prompt_len} toks in "
-          f"{t_prefill:.2f}s, generated {args.gen} toks in {t_gen:.2f}s "
-          f"({b * args.gen / t_gen:.1f} tok/s)")
-    print("sample:", gen[0][:12].tolist())
+    reqs = make_requests(args.requests, args.prompt_len, args.gen, cfg.vocab,
+                         stagger=args.stagger)
+    out = sched.run(reqs)
+    comps = out["completions"]
+    assert len(comps) == args.requests, (len(comps), args.requests)
+    mode = "naive (1 slot)" if args.naive else f"batched ({slots} slots)"
+    ttft = sorted(c.ttft_s for c in comps.values())
+    print(f"served {args.requests} requests [{mode}, fused_prefill="
+          f"{sched.fused}]: {out['generated']} toks in {out['wall_s']:.2f}s "
+          f"({out['tok_s']:.1f} tok/s, {out['ticks']} ticks)")
+    print(f"ttft (admission->first token) p50/p99: "
+          f"{ttft[len(ttft) // 2] * 1e3:.1f}/"
+          f"{ttft[int(len(ttft) * 0.99)] * 1e3:.1f} ms")
+    print("sample:", comps[0].tokens[:12])
 
 
 if __name__ == "__main__":

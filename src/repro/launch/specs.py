@@ -125,7 +125,10 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         if cfg.enc_dec:
             batch["frames"] = _abs((b, ENC_LEN, cfg.d_model), jnp.float32)
             bsh["frames"] = NamedSharding(mesh, _bspec(ctx, 3))
-        return Cell(cfg, shape, ctx, (batch,), (bsh,), "prefill")
+        # fused prefill writes the prompt's KV/state cache in-pass
+        cache = abstract_cache(cfg, b, s)
+        csh = to_shardings(cache_specs(cfg, ctx, cache), mesh)
+        return Cell(cfg, shape, ctx, (batch, cache), (bsh, csh), "prefill")
 
     # decode: one new token against a seq_len cache
     cache = abstract_cache(cfg, b, s)

@@ -127,16 +127,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
 
 
+def decode_prefill(params: Params, tokens: jax.Array, enc_out: jax.Array,
+                   cache: Any, cfg: ModelConfig, *,
+                   length: Optional[jax.Array] = None, ctx=None,
+                   unroll: int = 1) -> Tuple[jax.Array, Any]:
+    """Cache-writing full-sequence decoder pass: one fused call replaces a
+    prompt-length loop of decode steps.  tokens: (B, S) int32 starting at
+    position 0; every prompt token's self-attention K/V is written into the
+    cache in-pass.  ``length``: optional per-row true prompt lengths for
+    right-padded batches (pad entries are causally invisible).
+    Returns (last-position logits (B, V) f32, new_cache)."""
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens, cfg) + params["dec_pos"][:s].astype(L._dtype(cfg))
+    positions = jnp.arange(s)
+    cache_pos = jnp.int32(0)
+
+    def layer_fn(h, xs):
+        p, c = xs
+        a, c_new = L.attention(p["attn"], L.apply_norm(p["ln1"], h, cfg), positions,
+                               cfg, cache=c["attn"], cache_pos=cache_pos, ctx=ctx)
+        h = h + a
+        xa, _ = L.attention(p["xattn"], L.apply_norm(p["lnx"], h, cfg), positions,
+                            cfg, xattn_kv=enc_out, ctx=ctx)
+        h = h + xa
+        h = h + L.mlp(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+        return h, {"attn": c_new}
+
+    h, new_cache = lax.scan(layer_fn, h, (params["dec_layers"], cache), unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    if length is None:
+        h_last = h[:, -1]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(length) - 1, (b,))
+        h_last = h[jnp.arange(b), idx]
+    return L.logits(params["embed"], h_last[:, None], cfg)[:, 0], new_cache
+
+
 def decode_step(params: Params, token: jax.Array, cache: Any, pos: jax.Array,
                 enc_out: jax.Array, cfg: ModelConfig, *, unroll: int = 1,
                 ctx=None) -> Tuple[jax.Array, Any]:
     """One decoder step with cached self-attention; cross-attention recomputes
-    K/V from enc_out (B, T_enc, d)."""
+    K/V from enc_out (B, T_enc, d).  pos: scalar, or (B,) per-row positions."""
     b = token.shape[0]
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
     h = L.embed(params["embed"], token[:, None], cfg) + \
-        jnp.take(params["dec_pos"], pos[None] if jnp.ndim(pos) == 0 else pos,
-                 axis=0).astype(L._dtype(cfg))
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+        jnp.take(params["dec_pos"], positions, axis=0).astype(L._dtype(cfg))
 
     def layer_fn(h, xs):
         p, c = xs

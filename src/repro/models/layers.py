@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.config import ModelConfig
@@ -117,23 +118,30 @@ def _qk_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
 def _sdpa(q, k, v, *, causal: bool, window: Optional[int], q_offset: int | jax.Array,
           kv_len_valid=None) -> jax.Array:
     """Grouped SDPA.  q: (B, Lq, Hkv, rep, hd); k, v: (B, Lk, Hkv, hd).
-    ``q_offset``: absolute position of q[0] minus first key position.
-    ``kv_len_valid``: number of valid cache slots (decode with growing cache)."""
+    ``q_offset``: absolute position of q[0] minus first key position —
+    scalar, or (B,) for per-row positions (continuous-batching decode).
+    ``kv_len_valid``: number of valid cache slots (decode with a partially
+    filled cache) — scalar or (B,)."""
     b, lq, hkv, rep, hd = q.shape
     lk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     # bf16 operands, f32 accumulation (MXU-native); stats in f32
     s = jnp.einsum("bqgrd,bkgd->bgrqk", q * scale, k,
                    preferred_element_type=jnp.float32)
-    qpos = jnp.arange(lq) + q_offset
+    q_off = jnp.asarray(q_offset)
+    # (Lq,) for scalar offsets, (B, Lq) for per-row offsets
+    qpos = jnp.arange(lq) + (q_off[..., None] if q_off.ndim else q_off)
     kpos = jnp.arange(lk)
-    mask = jnp.ones((lq, lk), bool)
+    mask = jnp.ones(qpos.shape + (lk,), bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask &= kpos <= qpos[..., None]
     if window is not None:
-        mask &= qpos[:, None] - kpos[None, :] < window
+        mask &= qpos[..., None] - kpos < window
     if kv_len_valid is not None:
-        mask &= (kpos < kv_len_valid)[None, :]
+        kvv = jnp.asarray(kv_len_valid)
+        mask = mask & (kpos < (kvv[..., None, None] if kvv.ndim else kvv))
+    if mask.ndim == 3:                      # per-row mask: (B, 1, 1, Lq, Lk)
+        mask = mask[:, None, None]
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v,
@@ -224,16 +232,37 @@ def attention(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *
     new_cache = None
     if cache is not None:
         ck, cv = cache  # (B, L, Hkv, hd), L sharded over model
-        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
-        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        lk = ck.shape[1]
+        if jnp.ndim(cache_pos) == 1:
+            # per-row positions (continuous-batching decode, s == 1): scatter
+            # each row's token at its own slot; OOB rows (parked slots) drop
+            bidx = jnp.arange(b)
+            ck = ck.at[bidx, cache_pos].set(k[:, 0].astype(ck.dtype), mode="drop")
+            cv = cv.at[bidx, cache_pos].set(v[:, 0].astype(cv.dtype), mode="drop")
+        elif s > lk:
+            # fused SWA prefill, prompt longer than the ring: keep the last
+            # lk tokens at their ring slots (token j -> slot j % lk)
+            slots = np.arange(s - lk, s) % lk
+            ck = ck.at[:, slots].set(k[:, s - lk:].astype(ck.dtype))
+            cv = cv.at[:, slots].set(v[:, s - lk:].astype(cv.dtype))
+        else:
+            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
         ck = _cstr(ck, ctx, (B, M, None, None))
         cv = _cstr(cv, ctx, (B, M, None, None))
         new_cache = (ck, cv)
-        lk = ck.shape[1]
         q = _cstr(q, ctx, (B, None, None, None, None))
-        if cfg.window is not None and lk == cfg.window:
-            # ring cache: every slot valid, no causal mask within the ring
-            out = _sdpa(q, ck, cv, causal=False, window=None, q_offset=0)
+        if s > lk:
+            # prefill longer than the ring: attend the full in-flight k/v
+            # (the cache holds only the trailing window)
+            out = _sdpa(q, k, v, causal=True, window=cfg.window, q_offset=0)
+        elif cfg.window is not None and lk == cfg.window and s == 1:
+            # ring cache decode: slot validity from the absolute position —
+            # before the first wrap only pos+1 slots hold real tokens (the
+            # untouched zero-k/v slots would otherwise soak up softmax mass)
+            valid = jnp.minimum(positions[..., -1] + 1, lk)
+            out = _sdpa(q, ck, cv, causal=False, window=None, q_offset=0,
+                        kv_len_valid=valid)
         else:
             # end-aligned: query position == cache_pos
             out = _sdpa(q, ck, cv, causal=True, window=cfg.window,

@@ -152,18 +152,17 @@ def mamba2_init(rng, cfg: ModelConfig) -> Params:
 def _causal_conv(x: jax.Array, w: jax.Array,
                  cache: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Depthwise causal conv.  x: (B, S, C); w: (W, C).
-    Decode (S==1): ``cache`` is the last W-1 inputs, rolled."""
+    With ``cache`` (the last W-1 inputs) the window is seeded from it instead
+    of zero padding and the rolled last-(W-1)-inputs cache is returned —
+    S == 1 is the decode step, S > 1 the fused prefill."""
     wlen = w.shape[0]
-    if cache is not None:
-        window = jnp.concatenate([cache, x], axis=1)        # (B, W, C)
-        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
-        return y[:, None, :].astype(x.dtype), window[:, 1:, :]
-    pad = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
-    xp = jnp.concatenate([pad, x], axis=1)
+    prev = cache if cache is not None else \
+        jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B, W-1+S, C)
     # (B, S, W, C) windows via stacked slices (W is tiny, e.g. 4)
     y = sum(xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
             for i in range(wlen))
-    return y.astype(x.dtype), None
+    return y.astype(x.dtype), (xp[:, x.shape[1]:, :] if cache is not None else None)
 
 
 def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
@@ -195,17 +194,22 @@ def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
     q = jnp.broadcast_to(cmat[:, :, None, :], (b, seq, nh, s.d_state))
     k = jnp.broadcast_to(bmat[:, :, None, :], (b, seq, nh, s.d_state))
 
-    if cache is not None:
+    if cache is not None and seq == 1:
         y, ssm_new = linear_attention_step(cache["ssm"], q[:, 0], k[:, 0],
                                            xh[:, 0], log_a[:, 0], dt[:, 0])
         y = y[:, None]
         new_cache["ssm"] = ssm_new
     else:
         hs_, dks_ = engine_specs(nh, s.d_state, ctx)
-        y, _ = chunked_linear_attention(q, k, xh, log_a, dt, chunk=s.chunk,
-                                        unroll=s.unroll, ctx=ctx,
-                                        h_shard=hs_, dk_shard=dks_,
-                                        mm_bf16=s.mm_bf16)
+        # fused prefill seeds the chunk scan from the cached state and keeps
+        # the final state (train/eval forward discards it)
+        y, ssm_state = chunked_linear_attention(
+            q, k, xh, log_a, dt, chunk=s.chunk,
+            state0=cache["ssm"] if cache is not None else None,
+            unroll=s.unroll, ctx=ctx, h_shard=hs_, dk_shard=dks_,
+            mm_bf16=s.mm_bf16)
+        if cache is not None:
+            new_cache["ssm"] = ssm_state
 
     y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(b, seq, d_in).astype(_dtype(cfg))

@@ -242,13 +242,72 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), percell)
 
 
+def supports_fused_prefill(cfg: ModelConfig) -> bool:
+    """True when ``prefill`` handles arbitrary (right-padded, any-length)
+    prompts: pure-attention patterns, where causal masking makes end-padding
+    invisible.  Recurrent kinds (mamba2/mlstm/slstm) do support ``prefill``,
+    but only for unpadded prompts whose length divides into the chunk scan —
+    the serving scheduler falls back to the per-token loop for them."""
+    return all(k in ("attn", "attn_moe") for k in cfg.block_pattern)
+
+
+def prefill(params: Params, tokens: jax.Array, cache: Any, cfg: ModelConfig, *,
+            length: Optional[jax.Array] = None, ctx=None,
+            unroll: int = 1) -> Tuple[jax.Array, Any]:
+    """Cache-writing full-sequence forward: one fused call replaces a
+    prompt-length loop of decode steps.  tokens: (B, S) int32 starting at
+    position 0; the KV cache (attention) / recurrent state (SSM, xLSTM) for
+    all S tokens is written in-pass.  ``length``: optional per-row true
+    prompt lengths for right-padded batches — pad entries are causally
+    invisible (attention patterns only; recurrent state would absorb them).
+    Returns (last-position logits (B, V) f32, new_cache)."""
+    period = cfg.block_pattern
+    b, s = tokens.shape
+    if length is not None:
+        if not supports_fused_prefill(cfg):
+            raise NotImplementedError(
+                "padded fused prefill needs a causally-maskable pattern; "
+                f"{cfg.block_pattern} carries recurrent state")
+        ring = jax.tree.leaves(cache)[0].shape[2]
+        if s > ring:
+            # the trailing-window ring write would keep pad K/V and drop
+            # real tokens; unpadded (length=None) overflow is fine
+            raise NotImplementedError(
+                f"right-padded prefill bucket {s} exceeds the cache ring "
+                f"{ring}; cap the pad bucket at the attention window")
+    h = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)
+    cache_pos = jnp.int32(0)
+    shared_attn = params.get("shared_attn")
+
+    def period_fn(h, xs):
+        layer_p, cache_p = xs
+        new_caches = []
+        for i, kind in enumerate(period):
+            h, nc, _ = _block_apply(kind, layer_p[i], h, positions, cfg, ctx,
+                                    cache_p[i], cache_pos, shared_attn)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    h, new_cache = lax.scan(period_fn, h, (params["layers"], cache), unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    if length is None:
+        h_last = h[:, -1]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(length) - 1, (b,))
+        h_last = h[jnp.arange(b), idx]
+    logit = L.logits(params["embed"], h_last[:, None], cfg)[:, 0]
+    return logit, new_cache
+
+
 def decode_step(params: Params, token: jax.Array, cache: Any, pos: jax.Array,
                 cfg: ModelConfig, *, ctx=None, unroll: int = 1) -> Tuple[jax.Array, Any]:
-    """One decode step.  token: (B,) int32; pos: scalar absolute position.
-    Returns (logits (B, V) f32, new_cache)."""
+    """One decode step.  token: (B,) int32; pos: scalar absolute position, or
+    a (B,) vector of per-row positions (continuous-batching slots advance
+    independently).  Returns (logits (B, V) f32, new_cache)."""
     period = cfg.block_pattern
     h = L.embed(params["embed"], token[:, None], cfg)       # (B, 1, d)
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
     cache_pos = pos if cfg.window is None else pos % cfg.window
     shared_attn = params.get("shared_attn")
 

@@ -71,19 +71,21 @@ def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
     # normalizer channel: v' = [v, 1]
     v_ext = jnp.concatenate([v, jnp.ones((b, s, nh, 1), v.dtype)], axis=-1)
 
-    if cache is not None:
+    if cache is not None and s == 1:
         y, state = linear_attention_step(cache["ssm"], q[:, 0], k[:, 0],
                                          v_ext[:, 0], log_f[:, 0], i_g[:, 0])
         y = y[:, None]
         new_cache = {"ssm": state}
     else:
         hs_, dks_ = engine_specs(nh, hd, ctx)
-        y, _ = chunked_linear_attention(q, k, v_ext, log_f, i_g,
-                                        chunk=cfg.xlstm.chunk,
-                                        unroll=cfg.xlstm.unroll, ctx=ctx,
-                                        h_shard=hs_, dk_shard=dks_,
-                                        mm_bf16=cfg.xlstm.mm_bf16)
-        new_cache = None
+        # fused prefill seeds the chunk scan from the cached state and keeps
+        # the final state (train/eval forward discards it)
+        y, state = chunked_linear_attention(
+            q, k, v_ext, log_f, i_g, chunk=cfg.xlstm.chunk,
+            state0=cache["ssm"] if cache is not None else None,
+            unroll=cfg.xlstm.unroll, ctx=ctx, h_shard=hs_, dk_shard=dks_,
+            mm_bf16=cfg.xlstm.mm_bf16)
+        new_cache = {"ssm": state} if cache is not None else None
 
     num, den = y[..., :hd], y[..., hd:]
     h = num.astype(jnp.float32) / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
@@ -124,18 +126,20 @@ def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
         h = ot * c / jnp.maximum(n, 1e-6)
         return (c, n, m_new), h
 
-    if cache is not None:
+    if cache is not None and s == 1:
         carry = (cache["c"], cache["n"], cache["m"])
         carry, h = step(carry, (z[:, 0], i_raw[:, 0], f_raw[:, 0], o[:, 0]))
         h = h[:, None]
         new_cache = {"c": carry[0], "n": carry[1], "m": carry[2]}
     else:
-        init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(2)) + \
+        init = (cache["c"], cache["n"], cache["m"]) if cache is not None else \
+            tuple(jnp.zeros((b, d), jnp.float32) for _ in range(2)) + \
             (jnp.full((b, d), -1e30, jnp.float32),)
         xs = tuple(jnp.moveaxis(a, 1, 0) for a in (z, i_raw, f_raw, o))
-        _, hs = lax.scan(step, init, xs)
+        carry, hs = lax.scan(step, init, xs)
         h = jnp.moveaxis(hs, 0, 1)
-        new_cache = None
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2]} \
+            if cache is not None else None
 
     h = apply_norm(p["norm"], h.astype(_dtype(cfg)), cfg)
     return dense(h, p["proj"], cfg), new_cache

@@ -159,18 +159,25 @@ def train_state_shardings(cfg: ModelConfig, pcfg: ParallelConfig,
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
                       ctx: Optional[MeshCtx]) -> Callable:
-    """Full-sequence forward returning last-position logits (the KV cache for
-    a production server would be captured here; the dry-run measures the
-    forward cost, which dominates)."""
+    """Fused prefill: one cache-writing full-sequence forward per prompt —
+    ``prefill(params, batch, cache)`` returns ``(last_logits, cache)``
+    (enc-dec additionally returns the encoder output the decode steps need).
+    ``batch`` may carry per-row true prompt ``length``s for right-padded
+    prompts (attention patterns only; pad entries are causally invisible)."""
 
-    def prefill(params, batch):
+    def prefill(params, batch, cache):
+        length = batch.get("length")
         if cfg.enc_dec:
-            logits, _ = E.forward(params, batch["frames"], batch["tokens"], cfg,
-                                  remat="none", ctx=ctx, unroll=pcfg.scan_unroll)
-        else:
-            logits, _ = T.forward(params, batch["tokens"], cfg, ctx=ctx, remat="none",
+            enc = E.encode(params, batch["frames"], cfg, remat="none", ctx=ctx,
+                           unroll=pcfg.scan_unroll)
+            logits, cache = E.decode_prefill(params, batch["tokens"], enc, cache,
+                                             cfg, length=length, ctx=ctx,
+                                             unroll=pcfg.scan_unroll)
+            return logits, cache, enc
+        logits, cache = T.prefill(params, batch["tokens"], cache, cfg,
+                                  length=length, ctx=ctx,
                                   unroll=pcfg.scan_unroll)
-        return jnp.argmax(logits[:, -1], axis=-1)
+        return logits, cache
 
     return prefill
 

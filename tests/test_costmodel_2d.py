@@ -163,3 +163,44 @@ def test_summa_cost_rectangular():
     assert s["p"] == c["p"] == 8
     assert s["compute_s"] == pytest.approx(c["compute_s"])
     assert s["total_s"] > 0 and c["total_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Serving-path costs (decode_step_cost / prefill_cost)
+# ---------------------------------------------------------------------------
+def test_decode_step_cost_batch_amortizes_memory_bound():
+    """Decode streams the parameters once per step regardless of batch, so
+    while memory-bound the aggregate tok/s climbs near-linearly with batch,
+    and per-step memory time is flat until KV traffic matters."""
+    n_params = 3e9
+    c1 = cm.decode_step_cost(n_params, 1)
+    c64 = cm.decode_step_cost(n_params, 64)
+    assert c1["dominant"] == c64["dominant"] == "memory_s"
+    assert c64["memory_s"] == pytest.approx(c1["memory_s"])
+    assert c64["tok_s"] == pytest.approx(64 * c1["tok_s"])
+    # a huge batch eventually crosses to compute-bound
+    big = cm.decode_step_cost(n_params, 1 << 20)
+    assert big["dominant"] == "compute_s"
+    assert big["tok_s"] < (1 << 20) * c1["tok_s"]
+
+
+def test_decode_step_cost_kv_and_overhead_terms():
+    n_params = 3e9
+    base = cm.decode_step_cost(n_params, 8)
+    kv = cm.decode_step_cost(n_params, 8, kv_bytes=1e9)
+    assert kv["memory_s"] > base["memory_s"]
+    assert kv["tok_s"] < base["tok_s"]
+    slow = cm.decode_step_cost(n_params, 8, overhead_s=1.0)
+    assert slow["total_s"] == pytest.approx(base["total_s"] + 1.0)
+
+
+def test_prefill_cost_compute_bound_beats_decode_loop():
+    """Real prompts are compute-bound in one fused pass; the same tokens as
+    a decode-step loop pay the parameter stream per token instead."""
+    n_params, prompt = 3e9, 2048
+    pre = cm.prefill_cost(n_params, prompt)
+    assert pre["dominant"] == "compute_s"
+    loop = prompt * cm.decode_step_cost(n_params, 1)["total_s"]
+    assert pre["total_s"] < loop / 10
+    # short prompts degenerate to the memory-bound decode regime
+    assert cm.prefill_cost(n_params, 1)["dominant"] == "memory_s"

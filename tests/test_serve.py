@@ -1,0 +1,252 @@
+"""Serving-path tests: fused prefill oracles (cache-writing full-sequence
+forward ≡ per-token decode loop) and the continuous-batching scheduler."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import ParallelConfig
+from repro.launch.scheduler import Request, Scheduler, make_requests
+from repro.launch.train import reduced
+from repro.models import encdec as E
+from repro.models import transformer as T
+
+
+def tiny(arch, **kw):
+    """Reduced config in f32 (prefill and decode must agree numerically)."""
+    return reduced(configs.get(arch)).replace(
+        dtype="float32", param_dtype="float32", vocab=64, **kw)
+
+
+def _step(cfg):
+    """Jitted decode step (one trace per config instead of an eager retrace
+    of the layer scan per token — keeps the tier-1 budget)."""
+    return jax.jit(lambda p, t, c, i: T.decode_step(p, t, c, i, cfg))
+
+
+def _prefill(cfg):
+    return jax.jit(lambda p, t, c, ln=None: T.prefill(p, t, c, cfg, length=ln))
+
+
+def decode_loop(cfg, params, prompts, max_len, *, step=None):
+    """Token-by-token reference: returns (last logits, cache) after feeding
+    every prompt token through the decode step."""
+    step = step or _step(cfg)
+    cache = T.init_cache(cfg, prompts.shape[0], max_len, dtype=jnp.float32)
+    logit = None
+    for i in range(prompts.shape[1]):
+        logit, cache = step(params, prompts[:, i], cache, jnp.int32(i))
+    return logit, cache
+
+
+# ---------------------------------------------------------------------------
+# Fused prefill oracle: one cache-writing forward ≡ the decode loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,pattern", [
+    ("llama3.2-3b", None),                        # dense GQA
+    ("chatglm3-6b", None),                        # sliding-window (reduced: 64)
+    ("zamba2-1.2b", ("mamba2", "mamba2_attn")),   # recurrent + shared attn
+    ("xlstm-1.3b", ("mlstm", "slstm")),           # chunked mLSTM + sLSTM
+])
+def test_fused_prefill_matches_decode_loop(arch, pattern):
+    cfg = tiny(arch)
+    if pattern:
+        cfg = cfg.replace(block_pattern=pattern, n_layers=len(pattern))
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    b, lp, max_len = 2, 4, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, lp), 0, cfg.vocab)
+
+    step = _step(cfg)
+    ref_logit, ref_cache = decode_loop(cfg, params, prompts, max_len, step=step)
+    logit, cache = _prefill(cfg)(
+        params, prompts, T.init_cache(cfg, b, max_len, dtype=jnp.float32))
+    np.testing.assert_allclose(logit, ref_logit, atol=1e-4, rtol=1e-4)
+
+    # one more decode step from both caches must also agree (the cache state,
+    # not just the logits, is equivalent)
+    tok = jnp.argmax(logit, axis=-1).astype(jnp.int32)
+    nxt_f, _ = step(params, tok, cache, jnp.int32(lp))
+    nxt_r, _ = step(params, tok, ref_cache, jnp.int32(lp))
+    np.testing.assert_allclose(nxt_f, nxt_r, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_prefill_right_padded_lengths():
+    """Per-row true lengths on a right-padded batch: each row's last logits
+    equal its own unpadded run (pad tokens are causally invisible)."""
+    cfg = tiny("llama3.2-3b")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    lens, lb, max_len = [5, 3], 8, 12
+    rng = np.random.RandomState(2)
+    toks = np.zeros((2, lb), np.int32)
+    rows = [rng.randint(0, cfg.vocab, (n,)).astype(np.int32) for n in lens]
+    for r, row in enumerate(rows):
+        toks[r, :len(row)] = row
+
+    logit, _ = _prefill(cfg)(params, jnp.asarray(toks),
+                             T.init_cache(cfg, 2, max_len, dtype=jnp.float32),
+                             jnp.asarray(lens, jnp.int32))
+    step = _step(cfg)
+    for r, row in enumerate(rows):
+        ref, _ = decode_loop(cfg, params, jnp.asarray(row)[None], max_len,
+                             step=step)
+        np.testing.assert_allclose(logit[r], ref[0], atol=1e-4, rtol=1e-4)
+
+
+def test_fused_prefill_prompt_longer_than_window():
+    """SWA ring: a prompt longer than the window prefills the trailing ring
+    slots, and the next ring decode step matches the per-token loop (which
+    also exercises the pre-wrap slot-validity mask)."""
+    cfg = tiny("llama3.2-3b").replace(window=4)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    b, lp, max_len = 2, 8, 16     # cache ring length = window = 4 < lp
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (b, lp), 0, cfg.vocab)
+
+    step = _step(cfg)
+    ref_logit, ref_cache = decode_loop(cfg, params, prompts, max_len, step=step)
+    logit, cache = _prefill(cfg)(
+        params, prompts, T.init_cache(cfg, b, max_len, dtype=jnp.float32))
+    np.testing.assert_allclose(logit, ref_logit, atol=1e-4, rtol=1e-4)
+    tok = jnp.argmax(logit, axis=-1).astype(jnp.int32)
+    nxt_f, _ = step(params, tok, cache, jnp.int32(lp))
+    nxt_r, _ = step(params, tok, ref_cache, jnp.int32(lp))
+    np.testing.assert_allclose(nxt_f, nxt_r, atol=1e-4, rtol=1e-4)
+
+
+def test_padded_prefill_rejects_bucket_beyond_ring():
+    """A right-padded bucket longer than the SWA ring would keep pad K/V in
+    the cache (the trailing-window write can't see per-row lengths)."""
+    cfg = tiny("llama3.2-3b").replace(window=4)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(NotImplementedError, match="cache ring"):
+        T.prefill(params, toks, T.init_cache(cfg, 1, 16), cfg,
+                  length=jnp.asarray([3], jnp.int32))
+
+
+def test_encdec_fused_prefill_matches_decode_loop():
+    cfg = tiny("whisper-base")
+    params = E.init(jax.random.PRNGKey(0), cfg)
+    b, lp, t_enc, max_len = 2, 4, 6, 8
+    frames = jax.random.normal(jax.random.PRNGKey(4), (b, t_enc, cfg.d_model))
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (b, lp), 0, cfg.vocab)
+    enc = E.encode(params, frames, cfg)
+    step = jax.jit(lambda p, t, c, i, e: E.decode_step(p, t, c, i, e, cfg))
+
+    ref_cache = E.init_cache(cfg, b, max_len, dtype=jnp.float32)
+    ref_logit = None
+    for i in range(lp):
+        ref_logit, ref_cache = step(params, prompts[:, i], ref_cache,
+                                    jnp.int32(i), enc)
+    logit, cache = E.decode_prefill(params, prompts, enc,
+                                    E.init_cache(cfg, b, max_len,
+                                                 dtype=jnp.float32), cfg)
+    np.testing.assert_allclose(logit, ref_logit, atol=1e-4, rtol=1e-4)
+    tok = jnp.argmax(logit, axis=-1).astype(jnp.int32)
+    nxt_f, _ = step(params, tok, cache, jnp.int32(lp), enc)
+    nxt_r, _ = step(params, tok, ref_cache, jnp.int32(lp), enc)
+    np.testing.assert_allclose(nxt_f, nxt_r, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching scheduler
+# ---------------------------------------------------------------------------
+def test_scheduler_staggered_arrivals_complete_and_order_independent():
+    """Heterogeneous staggered requests all complete through a 2-slot pool,
+    and each request's greedy tokens are identical to serving it alone —
+    outputs must not depend on what shares the batch."""
+    cfg = tiny("llama3.2-3b")
+    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(7)
+    spec = [(4, 3, 0), (2, 5, 0), (6, 2, 1), (1, 4, 3), (0, 3, 3)]
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, (lp,)).astype(np.int32),
+                    gen=gen, arrival=arr)
+            for i, (lp, gen, arr) in enumerate(spec)]
+
+    sched = Scheduler(cfg, pcfg, params, slots=2, max_len=16, bucket=8)
+    out = sched.run(reqs)
+    comps = out["completions"]
+    assert sorted(comps) == [0, 1, 2, 3, 4]
+    assert out["generated"] == sum(g for _, g, _ in spec)
+    for i, (lp, gen, arr) in enumerate(spec):
+        assert len(comps[i].tokens) == gen
+        assert comps[i].admitted_tick >= arr
+
+    solo = Scheduler(cfg, pcfg, params, slots=1, max_len=16, bucket=8)
+    for req in reqs:
+        alone = solo.run([Request(rid=req.rid, prompt=req.prompt,
+                                  gen=req.gen, arrival=0)])
+        assert alone["completions"][req.rid].tokens == comps[req.rid].tokens, \
+            f"request {req.rid} depends on batching context"
+        solo.reset()
+
+
+def test_scheduler_empty_prompt_reuses_slot_with_fresh_state():
+    """A recurrent-family slot must be zeroed when an empty-prompt request
+    reuses it: state leaves have no position indexing, so the previous
+    occupant's SSM state is not causally masked away like stale KV."""
+    cfg = tiny("xlstm-1.3b").replace(block_pattern=("mlstm", "slstm"),
+                                     n_layers=2)
+    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(11)
+    warm = Request(rid=0, prompt=rng.randint(0, cfg.vocab, (4,)).astype(np.int32),
+                   gen=2, arrival=0)
+    empty = Request(rid=1, prompt=np.zeros((0,), np.int32), gen=3, arrival=0)
+
+    sched = Scheduler(cfg, pcfg, params, slots=1, max_len=16)
+    reused = sched.run([warm, empty])["completions"][1].tokens
+    sched.reset()
+    alone = sched.run([empty])["completions"][1].tokens
+    assert reused == alone
+
+
+def test_scheduler_streams_and_validates():
+    cfg = tiny("llama3.2-3b")
+    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        Scheduler(cfg, pcfg, params, slots=0, max_len=16)
+    sched = Scheduler(cfg, pcfg, params, slots=2, max_len=8)
+    with pytest.raises(ValueError):   # prompt + gen must fit a slot
+        sched.run([Request(rid=0, prompt=np.zeros(6, np.int32), gen=5)])
+    sched.reset()
+    seen = []
+    out = sched.run(make_requests(2, 3, 4, cfg.vocab),
+                    on_token=lambda rid, tok: seen.append((rid, tok)))
+    assert len(seen) == out["generated"] == 8
+    assert out["tok_s"] > 0 and out["wall_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serve CLI
+# ---------------------------------------------------------------------------
+def test_serve_cli_rejects_bad_args(monkeypatch):
+    from repro.launch import serve
+    for bad in (["--requests", "0"], ["--gen", "0"], ["--slots", "0"],
+                ["--prompt-len", "-1"], ["--prompt-len", "0", "--gen", "1"]):
+        monkeypatch.setattr(sys, "argv", ["serve"] + bad)
+        with pytest.raises(SystemExit) as e:
+            serve.main()
+        assert e.value.code == 2      # argparse usage error
+
+
+@pytest.mark.slow
+def test_serve_cli_runs_including_empty_prompt():
+    """The launcher end-to-end, including --prompt-len 0 (used to NameError
+    on the unbound first token) and the --naive A/B flag."""
+    import os
+    env = {**os.environ, "PYTHONPATH": "src"}
+    cwd = os.path.join(os.path.dirname(__file__), "..")
+    for extra in (["--prompt-len", "0"], ["--naive"]):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "llama3.2-3b", "--requests", "2", "--prompt-len", "4", "--gen",
+             "3", "--slots", "2"] + extra,
+            capture_output=True, text=True, timeout=600, env=env, cwd=cwd)
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        assert "served 2 requests" in r.stdout
