@@ -1,8 +1,15 @@
-"""Benchmark: framework train/decode step cost on reduced configs (CPU).
+"""Benchmark: framework train/decode step cost on reduced configs (CPU),
+plus the ZeRO-vs-allreduce train-step A/B behind ``BENCH_train.json``.
 
 Ties the paper's "abstraction costs nothing" claim to the LM framework: the
 foopar-TP (algebra) matmul path vs the pjit path on the same reduced model.
-CSV: name,us_per_call,derived.
+The A/B compares the layout the planner picks (grads reduce-scattered over
+the 8-way fsdp group, AdamW on the local shard, params gathered per layer)
+against the pre-ZeRO baseline (params/optimizer replicated, grads
+all-reduced, every device runs the full redundant update) on an identical
+step — same loss, different layout.  CSV: name,us_per_call,derived.
+
+REPRO_LM_SMOKE=1 shrinks everything for the CI smoke step.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -16,8 +23,11 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro import configs
 from repro.config import ParallelConfig, ShapeConfig, TrainConfig
+from repro.core import costmodel
+from repro.launch.mesh import make_local_mesh
 from repro.launch.train import reduced
 from repro.parallel import steps as S
+from repro.parallel.sharding import make_ctx
 from repro.data import make_batch_iterator
 
 
@@ -31,11 +41,90 @@ def timeit(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters, out
 
 
+def zero_vs_allreduce(smoke: bool):
+    """ZeRO-vs-allreduce A/B on the 8-way CPU mesh (see module docstring);
+    the model column is ``costmodel.train_step_cost`` with the flops rate
+    calibrated from a measured serial matmul — the *ordering* of the two
+    strategies, not the hardware constants, is what the model must get
+    right."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cfg = reduced(configs.get("llama3.2-3b"))
+    if not smoke:
+        # param-heavy / token-light so the optimizer segment (what ZeRO
+        # shards) is a visible slice of the step on the CPU sim
+        cfg = cfg.replace(d_model=512, d_ff=1024, vocab=8192, head_dim=128)
+    mesh = make_local_mesh()
+    shards = mesh.shape["data"]
+    shape = ShapeConfig("bench", "train", 8 if smoke else 16, shards)
+    tcfg = TrainConfig(warmup_steps=1, z_loss=0.0)
+    pc = cfg.param_counts()
+
+    # calibration: flops rate from a serial matmul, byte rate from a big
+    # elementwise op; the CPU sim's "interconnect" is host memory, so the
+    # link class shares the measured byte rate
+    n = 256
+    A = jnp.array(np.random.RandomState(0).randn(n, n), jnp.float32)
+    B = jnp.array(np.random.RandomState(1).randn(n, n), jnp.float32)
+    t_mm, _ = timeit(jax.jit(jnp.matmul), A, B)
+    flops_rate = 2.0 * n ** 3 / t_mm
+    x = jnp.array(np.random.RandomState(2).randn(1 << 22), jnp.float32)
+    t_ew, _ = timeit(jax.jit(lambda v: v * 1.0001 + 0.1), x)
+    byte_rate = 2.0 * x.size * 4 / t_ew
+    link = costmodel.LinkClass(t_s=1e-4, t_w=1.0 / byte_rate)
+
+    variants = {
+        "all_reduce": ParallelConfig(remat="none", fsdp_params=False,
+                                     grad_dtype="float32"),
+        "zero": ParallelConfig(remat="none", fsdp_params=True,
+                               grad_dtype="float32",
+                               grad_reduce="reduce_scatter_zero"),
+    }
+    times = {}
+    for name, pcfg in variants.items():
+        ctx = make_ctx(mesh, pcfg)
+        state = S.init_train_state(jax.random.PRNGKey(0), cfg, pcfg)
+        sh = S.train_state_shardings(cfg, pcfg, ctx, state)
+        bsh = {"tokens": NamedSharding(mesh, P(("data",), None))}
+        step = jax.jit(S.make_train_step(cfg, pcfg, tcfg, ctx),
+                       in_shardings=(sh, bsh), out_shardings=(sh, None),
+                       donate_argnums=(0,))
+        batch = jax.device_put(next(make_batch_iterator(cfg, shape)), bsh)
+        st = jax.device_put(state, sh)
+        st, _ = step(st, batch)
+        jax.block_until_ready(st)
+        ts = []
+        for _ in range(4 if smoke else 10):
+            t0 = time.perf_counter()
+            st, m = step(st, batch)
+            jax.block_until_ready(st)
+            ts.append(time.perf_counter() - t0)
+        model = costmodel.train_step_cost(
+            pc["active"], pc["total"],
+            tokens=float(shape.global_batch) * shape.seq_len, chips=shards,
+            tp=1, dp=shards,
+            fsdp_shard=shards if pcfg.fsdp_params else 1,
+            grad=pcfg.grad_reduce, batch_local=shape.global_batch // shards,
+            seq=shape.seq_len, d_model=cfg.d_model, n_layers=cfg.n_layers,
+            grad_bytes=4, param_bytes=4, remat="none", link=link,
+            peak_flops=flops_rate, hbm_bw=byte_rate)
+        times[name] = min(ts)
+        print(f"train_{name},{min(ts)*1e6:.0f},"
+              f"model_us={model['total_s']*1e6:.0f};shards={shards};"
+              f"loss={float(m['loss']):.3f}")
+    if not smoke:
+        assert times["zero"] <= times["all_reduce"] * 1.05, \
+            ("ZeRO layout must not lose to the replicated all-reduce step",
+             times)
+
+
 def main():
+    smoke = bool(os.environ.get("REPRO_LM_SMOKE"))
     pcfg = ParallelConfig(remat="none", fsdp_params=False)
     tcfg = TrainConfig(warmup_steps=1, z_loss=0.0)
     shape = ShapeConfig("bench", "train", 128, 8)
-    for arch in ("llama3.2-3b", "mixtral-8x22b", "zamba2-1.2b", "xlstm-1.3b"):
+    archs = ("llama3.2-3b",) if smoke else \
+        ("llama3.2-3b", "mixtral-8x22b", "zamba2-1.2b", "xlstm-1.3b")
+    for arch in archs:
         cfg = reduced(configs.get(arch))
         state = S.init_train_state(jax.random.PRNGKey(0), cfg, pcfg)
         step = jax.jit(S.make_train_step(cfg, pcfg, tcfg, None))
@@ -44,6 +133,7 @@ def main():
         toks = shape.seq_len * shape.global_batch
         print(f"lmstep_{arch},{t*1e6:.0f},tok_per_s={toks/t:.0f};"
               f"loss={float(m['loss']):.3f}")
+    zero_vs_allreduce(smoke)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@
   Fig. 5   (matmul efficiency) -> _matmul_efficiency.py
   §5       (Floyd-Warshall)    -> _floyd_warshall.py
   §4.2/4.3 (isoefficiency)     -> _isoefficiency.py (analytical, in-process)
-  framework step cost          -> _lm_step.py
+  framework step cost          -> _lm_step.py (+ ZeRO-vs-allreduce A/B
+                                  -> BENCH_train.json; alias: --only train)
 
 Each multi-device benchmark runs in a subprocess (needs its own
 XLA_FLAGS=--xla_force_host_platform_device_count before jax init).
@@ -19,9 +20,12 @@ import sys
 HERE = os.path.dirname(os.path.abspath(__file__))
 MATMUL_JSON = os.path.join(HERE, "..", "BENCH_matmul.json")
 SERVE_JSON = os.path.join(HERE, "..", "BENCH_serve.json")
+TRAIN_JSON = os.path.join(HERE, "..", "BENCH_train.json")
 SUBPROCESS_BENCHES = ["_op_costs.py", "_matmul_efficiency.py",
                       "_summa_vs_dns.py", "_floyd_warshall.py", "_lm_step.py",
                       "_serve_throughput.py"]
+ALIASES = {"train": "_lm_step.py", "serve": "_serve_throughput.py",
+           "matmul": "_summa_vs_dns.py"}
 
 
 def _isoefficiency() -> None:
@@ -46,42 +50,46 @@ def _isoefficiency() -> None:
               f"eff={pred['serial_s']/(q**3*pred['total_s']):.3f}")
 
 
-def _write_matmul_json(lines: list) -> None:
-    """Machine-readable per-PR perf trajectory: variant -> measured
-    us_per_call and model-predicted cost at the largest benchmarked size
-    (BENCH_matmul.json at the repo root, diffable across PRs)."""
-    pat = re.compile(r"^summa_vs_dns_(\w+?)_n(\d+),(\d+),model_us=(\d+)")
+# Machine-readable per-PR perf trajectories (BENCH_*.json at the repo root,
+# diffable across PRs): one spec per trajectory — CSV-line regex, field
+# names/types for the named groups after the key, and the output path.
+# ``keep`` resolves duplicate keys (matmul keeps the largest size n).
+BENCH_JSON = {
+    "summa_vs_dns_": {
+        "path": MATMUL_JSON,
+        "pattern": r"^summa_vs_dns_(\w+?)_n(\d+),(\d+),model_us=(\d+)",
+        "fields": (("n", int), ("us_per_call", int), ("model_us", int)),
+        "keep": lambda old, new: new["n"] >= old["n"],
+    },
+    "serve_": {
+        "path": SERVE_JSON,
+        "pattern": r"^serve_(\w+),(\d+),tok_s=([\d.]+);model_tok_s=([\d.]+)"
+                   r";slots=(\d+)",
+        "fields": (("us_per_tok", int), ("tok_s", float),
+                   ("model_tok_s", float), ("slots", int)),
+    },
+    "train_": {
+        "path": TRAIN_JSON,
+        "pattern": r"^train_(\w+),(\d+),model_us=(\d+);shards=(\d+)",
+        "fields": (("us_per_call", int), ("model_us", int), ("shards", int)),
+    },
+}
+
+
+def _write_bench_json(spec: dict, lines: list) -> None:
+    pat = re.compile(spec["pattern"])
     table = {}
     for line in lines:
         m = pat.match(line)
         if not m:
             continue
-        variant, n, us, model_us = m.group(1), *map(int, m.group(2, 3, 4))
-        if variant not in table or n >= table[variant]["n"]:
-            table[variant] = {"n": n, "us_per_call": us, "model_us": model_us}
+        key = m.group(1)
+        rec = {name: typ(val) for (name, typ), val
+               in zip(spec["fields"], m.groups()[1:])}
+        if key not in table or spec.get("keep", lambda o, n: True)(table[key], rec):
+            table[key] = rec
     if table:
-        with open(MATMUL_JSON, "w") as f:
-            json.dump(table, f, indent=2, sort_keys=True)
-            f.write("\n")
-
-
-def _write_serve_json(lines: list) -> None:
-    """Machine-readable serving A/B (BENCH_serve.json at the repo root,
-    diffable across PRs like BENCH_matmul.json): mode -> measured us/tok,
-    tok/s and the decode_step_cost-predicted tok/s."""
-    pat = re.compile(r"^serve_(\w+),(\d+),tok_s=([\d.]+);model_tok_s=([\d.]+)"
-                     r";slots=(\d+)")
-    table = {}
-    for line in lines:
-        m = pat.match(line)
-        if not m:
-            continue
-        table[m.group(1)] = {"us_per_tok": int(m.group(2)),
-                             "tok_s": float(m.group(3)),
-                             "model_tok_s": float(m.group(4)),
-                             "slots": int(m.group(5))}
-    if table:
-        with open(SERVE_JSON, "w") as f:
+        with open(spec["path"], "w") as f:
             json.dump(table, f, indent=2, sort_keys=True)
             f.write("\n")
 
@@ -90,14 +98,14 @@ def main() -> None:
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
+        only = ALIASES.get(only, only)
         assert only in SUBPROCESS_BENCHES, (only, SUBPROCESS_BENCHES)
     print("name,us_per_call,derived")
     if only is None:
         _isoefficiency()
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
-    matmul_lines = []
-    serve_lines = []
+    bench_lines = {prefix: [] for prefix in BENCH_JSON}
     for bench in SUBPROCESS_BENCHES if only is None else [only]:
         r = subprocess.run([sys.executable, os.path.join(HERE, bench)],
                            capture_output=True, text=True, env=env,
@@ -108,12 +116,11 @@ def main() -> None:
         for line in r.stdout.splitlines():
             if "," in line and not line.startswith(("W", "I", "/")):
                 print(line)
-                if line.startswith("summa_vs_dns_"):
-                    matmul_lines.append(line)
-                elif line.startswith("serve_"):
-                    serve_lines.append(line)
-    _write_matmul_json(matmul_lines)
-    _write_serve_json(serve_lines)
+                for prefix in BENCH_JSON:
+                    if line.startswith(prefix):
+                        bench_lines[prefix].append(line)
+    for prefix, spec in BENCH_JSON.items():
+        _write_bench_json(spec, bench_lines[prefix])
 
 
 if __name__ == "__main__":

@@ -169,6 +169,9 @@ class ParallelConfig:
     """How the model is laid out on the mesh."""
     fsdp_params: bool = True        # shard params over 'data' (ZeRO-3 style)
     fsdp_pod: bool = False          # extend param/opt sharding over 'pod'
+    grad_reduce: Literal["all_reduce", "reduce_scatter_zero"] = "all_reduce"
+    # ^ reduce_scatter_zero: grads reduce-scattered over the fsdp/data axes,
+    #   AdamW updates only the local shard, params all-gathered (ZeRO)
     opt_state_dtype: str = "float32"   # float32|bfloat16 (compression)
     grad_dtype: str = "bfloat16"       # gradient all-reduce compression
     remat: Literal["none", "dots", "full"] = "full"

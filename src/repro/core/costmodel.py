@@ -210,6 +210,123 @@ def prefill_cost(n_params_active: float, prompt_tokens: float, *,
 
 
 # ---------------------------------------------------------------------------
+# Train-step memory + time model (what ``parallel/planner.py`` scores).
+# Each comm term is a Table-1 collective: the TP activation combines are
+# reduceD-pairs (t_all_reduce), the ZeRO gradient scatter is the ring
+# reduceScatterD (t_reduce_scatter_ring), and the FSDP/ZeRO parameter
+# regather is allGatherD (t_all_gather).
+# ---------------------------------------------------------------------------
+def train_activation_bytes(batch_local: int, seq: int, d_model: int,
+                           d_ff: int, n_layers: int, vocab: int, *,
+                           remat: str = "full", act_bytes: int = 2,
+                           logit_chunk: int | None = None) -> float:
+    """Per-device live activation bytes of one train step.
+
+    ``remat='full'`` keeps only the layer-boundary residual per layer (the
+    layer body is recomputed in the backward); ``'dots'`` additionally keeps
+    the matmul outputs; ``'none'`` keeps every intermediate (the rough
+    per-token transformer constant 10·d_model + 3·d_ff).  The f32 logits
+    transient rides on top (bounded by ``logit_chunk`` when set)."""
+    toks = batch_local * seq
+    per_tok = {"full": d_model,
+               "dots": 5 * d_model + d_ff,
+               "none": 10 * d_model + 3 * d_ff}[remat] * act_bytes
+    logits = batch_local * (min(logit_chunk, seq) if logit_chunk else seq) * vocab * 4
+    return float(toks * per_tok * n_layers + logits)
+
+
+def train_memory_bytes(n_params_total: float, *, tp: int = 1,
+                       fsdp_shard: int = 1, dp: int = 1,
+                       grad: str = "all_reduce",
+                       param_bytes: int = 4, grad_bytes: int = 2,
+                       opt_state_bytes: int = 4, master: bool = False,
+                       activation_bytes: float = 0.0) -> dict:
+    """Per-device HBM bytes of the training state under a layout.
+
+    Params are sharded over tp × fsdp_shard; gradients and optimizer moments
+    follow the params (``all_reduce``: every device holds the full grad and
+    updates its whole param residency) or the ZeRO scatter layout
+    (``reduce_scatter_zero``: grads/m/v/master live on 1/dp of the non-TP
+    shard — Θ(2m/p) vs the all-reduce layout's Θ(2m), ZeRO §5)."""
+    shard = tp * fsdp_shard
+    zero = grad == "reduce_scatter_zero"
+    # the ZeRO scatter only adds sharding where FSDP storage hasn't already
+    # (scatter_specs leaves FSDP-sharded leaves alone)
+    gshard = tp * (fsdp_shard if fsdp_shard > 1 else (dp if zero else 1))
+    params = n_params_total * param_bytes / shard
+    grads = n_params_total * grad_bytes / gshard
+    opt = n_params_total * (2 * opt_state_bytes + (4 if master else 0)) / gshard
+    total = params + grads + opt + activation_bytes
+    return {"params": params, "grads": grads, "opt": opt,
+            "activations": activation_bytes, "total": total}
+
+
+def train_step_cost(n_params_active: float, n_params_total: float,
+                    tokens: float, *, chips: int, tp: int = 1, dp: int = 1,
+                    fsdp_shard: int = 1, grad: str = "all_reduce",
+                    batch_local: int = 1, seq: int = 1, d_model: int = 1,
+                    n_layers: int = 1, param_bytes: int = 2,
+                    grad_bytes: int = 2, opt_state_bytes: int = 4,
+                    master: bool = False, remat: str = "full",
+                    link: LinkClass = ICI,
+                    peak_flops: float = PEAK_FLOPS_BF16,
+                    hbm_bw: float = HBM_BW) -> dict:
+    """Predicted wall time of one train step under a ``ParallelPlan`` layout.
+
+    Terms (each mapped to its Table-1 collective):
+      compute_s   6·N·D/(chips·peak) roofline (×4/3 under full remat — the
+                  recompute is one extra forward)
+      tp_comm_s   4·L per-layer activation combines over the TP group:
+                  reduceD-pairs costed as ``t_all_reduce`` (XLA's RS+AG form)
+      gather_s    FSDP parameter regather, fwd+bwd: ``t_all_gather`` over the
+                  fsdp axes of the per-device param shard
+      grad_s      the gradient reduction over the dp group —
+                  all_reduce: ``t_all_reduce`` of the full (non-TP) grad;
+                  reduce_scatter_zero: ring ``t_reduce_scatter_ring`` of the
+                  grads + ``t_all_gather`` of the updated param shard
+      update_s    optimizer HBM traffic (grad read + m/v read/write + param
+                  read/write): over 1/dp of the params under ZeRO, the whole
+                  residency under all_reduce
+    """
+    compute = 6.0 * n_params_active * tokens / (chips * peak_flops)
+    if remat == "full":
+        compute *= 4.0 / 3.0
+    n_tp = n_params_total / tp                       # per-TP-shard params
+    m_act = batch_local * seq * d_model * 2          # bf16 activations
+    tp_comm = 4.0 * n_layers * t_all_reduce(m_act, tp, link)
+    gather = 2.0 * t_all_gather(n_tp * param_bytes / fsdp_shard, fsdp_shard,
+                                link) if fsdp_shard > 1 else 0.0
+    zero = grad == "reduce_scatter_zero"
+    g_bytes = n_tp * grad_bytes
+    if fsdp_shard > 1:
+        # FSDP storage already scatters the reduction (GSPMD folds the
+        # all-reduce + slice into a reduce-scatter); the param regather is
+        # gather_s above, for either grad strategy
+        grad_s = t_reduce_scatter_ring(g_bytes, dp, link)
+        opt_shard = fsdp_shard
+    elif zero:
+        grad_s = (t_reduce_scatter_ring(g_bytes, dp, link)
+                  + t_all_gather(n_tp * param_bytes / max(dp, 1), dp, link))
+        opt_shard = dp
+    else:
+        grad_s = t_all_reduce(g_bytes, dp, link)
+        opt_shard = 1
+    opt_traffic = n_tp * (grad_bytes + 2 * param_bytes + 4 * opt_state_bytes
+                          + (8 if master else 0))
+    update = opt_traffic / opt_shard / hbm_bw
+    # fwd/bwd parameter streaming (3 passes over the resident shard)
+    memory = 3.0 * n_tp / fsdp_shard * param_bytes / hbm_bw
+    total = max(compute, memory) + tp_comm + gather + grad_s + update
+    terms = {"compute_s": compute, "memory_s": memory, "tp_comm_s": tp_comm,
+             "gather_s": gather, "grad_s": grad_s, "update_s": update,
+             "comm_s": tp_comm + gather + grad_s, "total_s": total}
+    terms["dominant"] = max(
+        ("compute_s", "memory_s", "tp_comm_s", "gather_s", "grad_s",
+         "update_s"), key=lambda k: terms[k])
+    return terms
+
+
+# ---------------------------------------------------------------------------
 # Isoefficiency (paper §2, §4.2.1, §4.3): W = K * T_o(W, p).
 # ---------------------------------------------------------------------------
 def efficiency(t_serial: float, t_parallel: float, p: int) -> float:

@@ -29,33 +29,20 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.parallel import steps as S
+from repro.parallel import planner
+from repro.parallel import sharding
 from repro.parallel.sharding import param_specs, opt_specs, to_shardings
 from repro.core import costmodel
 
 
-def default_pcfg(arch: str, kind: str) -> ParallelConfig:
-    """Per-arch parallel defaults (see EXPERIMENTS.md §Dry-run for rationale).
-
-    Train: FSDP always (optimizer states dominate); ≥100B models get bf16
-    optimizer states + pod-extended FSDP to fit 16 GiB chips.
-
-    Serve (prefill/decode): params are bf16 and kept *TP-resident* (no FSDP
-    gathers per token) whenever total×2B/16 shards fits comfortably; only the
-    ≥100B configs keep FSDP (their per-step gather amortizes over the batch)."""
-    from repro import configs as _c
-    big = arch in ("llama3-405b", "kimi-k2-1t-a32b", "command-r-plus-104b",
-                   "mixtral-8x22b", "chameleon-34b")
-    if kind == "train":
-        return ParallelConfig(
-            fsdp_params=True,
-            fsdp_pod=big,
-            opt_state_dtype="bfloat16" if big else "float32",
-            remat="full",
-        )
-    total = _c.get(arch).param_counts()["total"]
-    fits_tp = total * 2 / 16 < 12 * 2**30
-    return ParallelConfig(fsdp_params=not fits_tp, fsdp_pod=not fits_tp,
-                          remat="none")
+def default_pcfg(arch: str, kind: str,
+                 multi_pod: bool = False) -> ParallelConfig:
+    """Cost-model-chosen per-cell defaults: the old hand-written rule table
+    is gone — ``planner.default_plan`` ranks the plan lattice with
+    ``costmodel.train_memory_bytes`` / ``train_step_cost`` (see the ROADMAP
+    plan-lattice table) and this returns the winner's config.  ``multi_pod``
+    scores the (2,16,16) lattice (pod-extended fsdp becomes available)."""
+    return planner.default_plan(arch, kind, multi_pod=multi_pod).to_pcfg()
 
 
 def _cell_cfg(arch: str, kind: str):
@@ -69,7 +56,10 @@ def _cell_cfg(arch: str, kind: str):
 def lower_cell(arch: str, shape_name: str, mesh, pcfg=None, cfg_override=None):
     shape = SHAPES[shape_name]
     cfg = cfg_override or _cell_cfg(arch, shape.kind)
-    pcfg = pcfg or default_pcfg(arch, shape.kind)
+    if hasattr(pcfg, "to_pcfg"):          # a first-class ParallelPlan
+        pcfg = pcfg.to_pcfg()
+    pcfg = pcfg or default_pcfg(arch, shape.kind,
+                                multi_pod="pod" in mesh.axis_names)
     tcfg = TrainConfig()
     cell = build_cell(cfg, shape, mesh, pcfg)
     ctx = cell.ctx
@@ -124,7 +114,7 @@ def _probe(arch, shape_name, mesh, scan_unroll, inner: bool):
     """One lower+compile with probe unrolls; returns raw analysis."""
     shape = SHAPES[shape_name]
     cfg = _cell_cfg(arch, shape.kind)
-    pcfg = default_pcfg(arch, shape.kind)
+    pcfg = default_pcfg(arch, shape.kind, multi_pod="pod" in mesh.axis_names)
     import dataclasses
     pcfg = dataclasses.replace(pcfg, scan_unroll=scan_unroll)
     cfg2 = _inner_unrolled(cfg) if inner else cfg
@@ -206,6 +196,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     shape = SHAPES[shape_name]
     cfg = _cell_cfg(arch, shape.kind)
 
+    sharding.reset_dropped_partitions()
     t0 = time.time()
     rec, cell, compiled = _probe(arch, shape_name, mesh, 1, False)
     t1 = time.time()
@@ -243,7 +234,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
         return max(out, m11)
 
     flops_dev = corrected(lambda r: r["flops_per_device"])
-    pcfg_eff, _ = _apply_overrides(default_pcfg(arch, shape.kind), cfg)
+    pcfg_eff, _ = _apply_overrides(
+        default_pcfg(arch, shape.kind, multi_pod=multi_pod), cfg)
     over_dev = _moe_ragged_overcount(cfg, shape, cell.ctx, pcfg_eff)
     flops_dev = max(flops_dev - over_dev, 0.0)
     bytes_dev = corrected(lambda r: r["bytes_per_device"])
@@ -277,6 +269,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
         "roofline": terms,
         "compile_s": t1 - t0, "probe_s": t2 - t1,
         "batch_axes": list(cell.ctx.batch_axes),
+        # partitions the rule table asked for but the shapes didn't divide —
+        # the layout the planner scored vs the one that actually ran
+        "sharding_dropped": sharding.dropped_partition_report(),
     })
     if verbose:
         mem = rec["memory"]
@@ -286,7 +281,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
               f"temp={mem['temp_bytes']/2**30:.2f}GiB  "
               f"flops/dev={rec['flops_per_device']:.3e}  "
               f"useful={rec['useful_flops_ratio']:.2f}  "
-              f"dominant={terms['dominant']} ({terms['bound_s']*1e3:.2f} ms)")
+              f"dominant={terms['dominant']} ({terms['bound_s']*1e3:.2f} ms)"
+              + (f"  dropped_shards={len(rec['sharding_dropped'])}"
+                 if rec["sharding_dropped"] else ""))
         print("  memory_analysis:", rec["memory"])
         print("  cost_analysis(corrected): flops/dev=%.4e bytes/dev=%.4e wire/dev=%.4e" %
               (rec["flops_per_device"], rec["bytes_per_device"],

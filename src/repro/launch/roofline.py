@@ -8,15 +8,22 @@ Also hosts the parallel-matmul scenario table (paper §4 + the 2D family):
 
   PYTHONPATH=src python -m repro.launch.roofline --matmul n=8192,p=64
 
-and the serving-path table (continuous-batching scheduler vs naive, from
+the serving-path table (continuous-batching scheduler vs naive, from
 ``costmodel.decode_step_cost`` / ``prefill_cost``):
 
   PYTHONPATH=src python -m repro.launch.roofline --serve arch=llama3.2-3b,prompt=2048,gen=256,chips=16
+
+and the auto-parallel plan-lattice table (``parallel/planner.py`` ranked by
+the Table-1 train-step model, with measured zero-vs-allreduce numbers from
+``BENCH_train.json`` when present):
+
+  PYTHONPATH=src python -m repro.launch.roofline --plan arch=llama3.2-3b,batch=256,seq=4096,mesh=16x16
 """
 from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 
 from repro.core import costmodel
@@ -174,8 +181,49 @@ def serve_table(arch: str, prompt: int, gen: int, chips: int = 1) -> str:
     return "\n".join(rows)
 
 
+def plan_table(arch: str, batch: int, seq: int, mesh: tuple,
+               kind: str = "train") -> str:
+    """Ranked plan lattice for one (arch × shape) cell, plus the measured
+    zero-vs-allreduce A/B from ``BENCH_train.json`` (written by
+    ``benchmarks/run.py --only train``) as predicted-vs-measured ground
+    truth for the two grad strategies."""
+    from repro import configs
+    from repro.parallel import planner
+    cfg = configs.get(arch)
+    ranked = planner.plan_search(cfg, mesh, batch, seq, kind)
+    out = [f"### plan lattice — {arch} × {kind} b={batch} s={seq} "
+           f"mesh={'x'.join(map(str, mesh))}", "",
+           planner.format_plan_table(ranked)]
+    bench = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "BENCH_train.json")
+    if os.path.exists(bench):
+        rows = json.load(open(bench))
+        out.append("")
+        out.append("measured A/B (BENCH_train.json, reduced config on the "
+                   "CPU mesh; model_us from the same train_step_cost that "
+                   "ranked the lattice):")
+        for name, r in sorted(rows.items()):
+            out.append(f"  {name}: measured {r['us_per_call']} us/step vs "
+                       f"predicted {r['model_us']} us "
+                       f"(scatter group {r.get('shards', '?')})")
+    return "\n".join(out)
+
+
 def main():
     args = sys.argv[1:]
+    if args and args[0] == "--plan":
+        try:
+            kv = dict(s.split("=") for s in args[1].split(",")) if len(args) > 1 else {}
+            arch = kv.get("arch", "llama3.2-3b")
+            batch, seq = int(kv.get("batch", 256)), int(kv.get("seq", 4096))
+            mesh = tuple(int(d) for d in kv.get("mesh", "16x16").split("x"))
+            kind = kv.get("kind", "train")
+        except ValueError:
+            raise SystemExit(
+                "usage: roofline --plan arch=<name>,batch=<n>,seq=<n>,"
+                "mesh=<d>x<d>[,kind=train|decode]")
+        print(plan_table(arch, batch, seq, mesh, kind))
+        return
     if args and args[0] == "--serve":
         try:
             kv = dict(s.split("=") for s in args[1].split(",")) if len(args) > 1 else {}

@@ -46,6 +46,30 @@ from repro.models import transformer as T
 from repro.parallel import steps as S
 
 
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float,
+                  top_p: float = 1.0) -> jax.Array:
+    """Temperature / top-p (nucleus) sampling over ``(B, V)`` logits;
+    ``temperature == 0`` is greedy argmax (the scheduler's default and the
+    test oracle).  Top-p keeps the smallest prefix of the sorted
+    distribution whose mass exceeds ``top_p`` (the top token always
+    survives), masks the rest to -inf, and samples the renormalized tail."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # temperature first, nucleus second (the conventional order): the top-p
+    # mass is measured on the tempered distribution, so raising T widens
+    # the kept set
+    logits = logits.astype(jnp.float32) / temperature
+    if top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = cum - probs < top_p            # mass before this token < p
+        last = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0)
+        thresh = jnp.take_along_axis(sorted_l, last[..., None], axis=-1)
+        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
 @dataclass(frozen=True)
 class Request:
     rid: int
@@ -86,32 +110,64 @@ class Scheduler:
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, params, *,
                  slots: int = 4, max_len: int = 256, bucket: int = 16,
-                 bos: int = 0, ctx=None):
+                 bos: int = 0, ctx=None, temperature: float = 0.0,
+                 top_p: float = 1.0, seed: int = 0):
         if cfg.enc_dec:
             raise NotImplementedError("enc-dec serving is not scheduled yet")
         if slots < 1 or max_len < 2:
             raise ValueError(f"need slots >= 1 and max_len >= 2, got "
                              f"{slots}/{max_len}")
+        if temperature < 0.0 or not 0.0 < top_p <= 1.0:
+            raise ValueError(f"need temperature >= 0 and 0 < top_p <= 1, "
+                             f"got {temperature}/{top_p}")
         if cfg.window is not None and max_len > cfg.window:
             raise NotImplementedError(
                 f"slots are end-aligned: max_len {max_len} must fit the "
                 f"attention window {cfg.window}")
+        if hasattr(pcfg, "to_pcfg"):          # a first-class ParallelPlan
+            pcfg = pcfg.to_pcfg()
         self.cfg, self.pcfg, self.params, self.ctx = cfg, pcfg, params, ctx
         self.slots, self.max_len = slots, max_len
         self.bucket, self.bos = max(1, bucket), bos
+        self.temperature, self.top_p, self.seed = temperature, top_p, seed
+        self.sampling = temperature > 0.0
         self.fused = T.supports_fused_prefill(cfg)
-        self._decode = jax.jit(S.make_decode_step(cfg, pcfg, ctx),
-                               donate_argnums=(2,))
+        if self.sampling:
+            # logits-returning decode + per-tick sampling, one fused jit:
+            # every slot samples from its own row (parked rows ride along)
+            base = S.make_decode_step(cfg, pcfg, ctx, return_logits=True)
+
+            def _sampled(p, tok, cache, pos, key):
+                logits, new_cache = base(p, tok, cache, pos)
+                return sample_tokens(logits, key, temperature, top_p), new_cache
+
+            self._decode = jax.jit(_sampled, donate_argnums=(2,))
+        else:
+            self._decode = jax.jit(S.make_decode_step(cfg, pcfg, ctx),
+                                   donate_argnums=(2,))
+        # unpadded per-token prefill fallback is always greedy-shaped (its
+        # intermediate outputs are ignored; the last token is re-sampled)
+        self._decode_greedy = self._decode if not self.sampling else \
+            jax.jit(S.make_decode_step(cfg, pcfg, ctx), donate_argnums=(2,))
         self._prefill = jax.jit(S.make_prefill_step(cfg, pcfg, ctx),
                                 donate_argnums=(2,)) if self.fused else None
+        self._prefill_logits = jax.jit(
+            S.make_decode_step(cfg, pcfg, ctx, return_logits=True),
+            donate_argnums=(2,)) if self.sampling and not self.fused else None
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self.reset()
 
     def reset(self) -> None:
-        """Fresh cache + slot state (jit caches survive — use for warmup)."""
+        """Fresh cache + slot state (jit caches survive — use for warmup);
+        the sampling stream restarts from the seed for reproducible runs."""
         self.cache = T.init_cache(self.cfg, self.slots, self.max_len)
         self._tok = np.zeros((self.slots,), np.int32)
         self._pos = np.zeros((self.slots,), np.int32)
+        self._key = jax.random.PRNGKey(self.seed)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
 
     @staticmethod
     def _insert_impl(big, small, slot):
@@ -152,16 +208,29 @@ class Scheduler:
                      "length": jnp.asarray([lp], jnp.int32)}
             logits, row = self._prefill(self.params, batch,
                                         T.init_cache(self.cfg, 1, lb))
-            first = int(jnp.argmax(logits, axis=-1)[0])
+            if self.sampling:
+                first = int(sample_tokens(logits, self._next_key(),
+                                          self.temperature, self.top_p)[0])
+            else:
+                first = int(jnp.argmax(logits, axis=-1)[0])
         else:
             # recurrent state absorbs padding: unpadded per-token loop (B=1;
-            # jit retraces per shape, so this reuses the decode step fn)
+            # jit retraces per shape, so this reuses the decode step fn);
+            # only the last prompt token's output matters — it is re-sampled
+            # from its logits when sampling is on
             row = T.init_cache(self.cfg, 1, self._bucketed(lp))
             nxt = None
             for i in range(lp):
-                nxt, row = self._decode(self.params,
-                                        jnp.asarray(prompt[i:i + 1]), row,
-                                        jnp.int32(i))
+                if self.sampling and i == lp - 1:
+                    lg, row = self._prefill_logits(
+                        self.params, jnp.asarray(prompt[i:i + 1]), row,
+                        jnp.int32(i))
+                    nxt = sample_tokens(lg, self._next_key(),
+                                        self.temperature, self.top_p)
+                else:
+                    nxt, row = self._decode_greedy(
+                        self.params, jnp.asarray(prompt[i:i + 1]), row,
+                        jnp.int32(i))
             first = int(nxt[0])
         self.cache = self._insert(self.cache, row, jnp.int32(slot))
         self._tok[slot], self._pos[slot] = first, lp
@@ -216,8 +285,14 @@ class Scheduler:
                 # nothing resident: fast-forward the virtual clock
                 tick = pending[0].arrival if pending else tick + 1
                 continue
-            nxt, self.cache = self._decode(self.params, jnp.asarray(self._tok),
-                                           self.cache, jnp.asarray(self._pos))
+            if self.sampling:
+                nxt, self.cache = self._decode(
+                    self.params, jnp.asarray(self._tok), self.cache,
+                    jnp.asarray(self._pos), self._next_key())
+            else:
+                nxt, self.cache = self._decode(
+                    self.params, jnp.asarray(self._tok), self.cache,
+                    jnp.asarray(self._pos))
             nxt = np.asarray(nxt)               # host sync = the stream point
             tick += 1
             for slot in list(active):

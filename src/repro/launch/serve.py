@@ -20,10 +20,10 @@ import argparse
 import jax
 
 from repro import configs
-from repro.config import ParallelConfig
 from repro.launch.scheduler import Scheduler, make_requests
 from repro.launch.train import reduced
 from repro.models import transformer as T
+from repro.parallel import planner
 
 
 def main():
@@ -37,12 +37,21 @@ def main():
                     help="ticks (decode steps) between request arrivals")
     ap.add_argument("--naive", action="store_true",
                     help="one-request-at-a-time baseline (slots=1)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (the default "
+                         "and the test oracle)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with --temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling stream seed (reproducible runs)")
     args = ap.parse_args()
     if args.requests < 1 or args.gen < 1:
         ap.error(f"--requests and --gen must be >= 1 "
                  f"(got {args.requests}/{args.gen})")
     if args.prompt_len < 0 or args.slots < 1 or args.stagger < 0:
         ap.error("--prompt-len/--stagger must be >= 0 and --slots >= 1")
+    if args.temperature < 0 or not 0 < args.top_p <= 1:
+        ap.error("--temperature must be >= 0 and --top-p in (0, 1]")
     if args.prompt_len + args.gen < 2:
         ap.error("--prompt-len + --gen must be >= 2 (the slot pool needs a "
                  "cache of at least two positions)")
@@ -50,7 +59,9 @@ def main():
     cfg = reduced(configs.get(args.arch))
     if cfg.enc_dec:
         raise SystemExit("enc-dec serving: use examples/whisper_serve.py")
-    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    # single-host CPU layout as a first-class plan (the scheduler bridges it)
+    plan = planner.ParallelPlan(mesh_shape=(1, 1), fsdp_axes=(), tp=1,
+                                grad="none", remat="none")
     params = T.init(jax.random.PRNGKey(0), cfg)
 
     slots = 1 if args.naive else args.slots
@@ -58,7 +69,9 @@ def main():
     if cfg.window is not None and max_len > cfg.window:
         raise SystemExit(f"prompt+gen {max_len} exceeds the reduced "
                          f"attention window {cfg.window}")
-    sched = Scheduler(cfg, pcfg, params, slots=slots, max_len=max_len)
+    sched = Scheduler(cfg, plan, params, slots=slots, max_len=max_len,
+                      temperature=args.temperature, top_p=args.top_p,
+                      seed=args.seed)
 
     # warmup: compile prefill/decode/insert outside the timed run
     sched.run(make_requests(min(2, args.requests), args.prompt_len,
@@ -71,6 +84,8 @@ def main():
     comps = out["completions"]
     assert len(comps) == args.requests, (len(comps), args.requests)
     mode = "naive (1 slot)" if args.naive else f"batched ({slots} slots)"
+    if args.temperature > 0:
+        mode += f", T={args.temperature} top_p={args.top_p}"
     ttft = sorted(c.ttft_s for c in comps.values())
     print(f"served {args.requests} requests [{mode}, fused_prefill="
           f"{sched.fused}]: {out['generated']} toks in {out['wall_s']:.2f}s "

@@ -23,6 +23,7 @@ from repro import configs
 from repro.config import (ModelConfig, ParallelConfig, ShapeConfig, TrainConfig)
 from repro.data import make_batch_iterator
 from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.parallel import planner
 from repro.parallel import steps as S
 from repro.parallel.sharding import make_ctx, param_specs, to_shardings
 from repro.runtime import TrainingRunner
@@ -53,7 +54,15 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--reduce", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduce can actually turn it off (the old
+    # store_true + default=True pair made the flag impossible to disable)
+    ap.add_argument("--reduce", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--plan", default="default",
+                    choices=["default", "auto", "zero", "allreduce"],
+                    help="parallel layout: 'auto' runs the cost-model "
+                         "plan_search on the local mesh; zero/allreduce pin "
+                         "the gradient strategy")
     # 3e-3 (with the seeded init/data below) descends within even 8-step
     # smoke runs; 1e-3 needs tens of steps to clear the warmup ramp
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -67,7 +76,24 @@ def main():
     if args.reduce:
         cfg = reduced(cfg)
     shape = ShapeConfig("train_cli", "train", args.seq, args.batch)
-    pcfg = ParallelConfig(remat="none", fsdp_params=False)
+    n_dev = len(jax.devices())
+    mesh = make_local_mesh(model=args.model_parallel)
+    if args.plan == "auto":
+        # cost-driven layout on the local mesh (a ParallelPlan, ranked by
+        # the Table-1 step model); top feasible point wins
+        ranked = planner.plan_search(
+            cfg, tuple(mesh.shape[a] for a in mesh.axis_names),
+            args.batch, args.seq, "train",
+            axis_names=tuple(mesh.axis_names))
+        plan = planner.best_plan(ranked)   # same f32-moments numerics guard
+        top = next(r for r in ranked if r.plan is plan)
+        print(f"plan_search picked: {plan.label()} "
+              f"(predicted {top.total_s * 1e3:.2f} ms/step)")
+        pcfg = plan.to_pcfg()
+    else:
+        grad = {"zero": "reduce_scatter_zero"}.get(args.plan, "all_reduce")
+        pcfg = ParallelConfig(remat="none", fsdp_params=False,
+                              grad_reduce=grad)
     # warmup must fit inside short smoke runs (the fault-injection test does 8
     # steps) or the effective lr never leaves the ramp and the loss plateaus
     warmup = max(1, min(10, args.steps // 4))
@@ -75,8 +101,6 @@ def main():
                        checkpoint_every=args.ckpt_every,
                        checkpoint_dir=args.ckpt_dir, z_loss=0.0)
 
-    n_dev = len(jax.devices())
-    mesh = make_local_mesh(model=args.model_parallel)
     ctx = make_ctx(mesh, pcfg) if n_dev > 1 else None
 
     train_step = S.make_train_step(cfg, pcfg, tcfg, ctx)

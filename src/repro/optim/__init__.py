@@ -1,2 +1,3 @@
-from .adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm
+from .adamw import (adamw_init, adamw_update, adamw_update_zero, global_norm,
+                    clip_by_global_norm)
 from .schedule import warmup_cosine

@@ -83,3 +83,31 @@ def adamw_update(grads: Pytree, opt_state: Pytree, params: Pytree, *,
     if has_master:
         new["master"] = pick("w")
     return pick("p"), new
+
+
+def adamw_update_zero(grads: Pytree, opt_state: Pytree, params: Pytree, *,
+                      scatter: Pytree, gather: Pytree, lr: jax.Array | float,
+                      b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                      weight_decay: float = 0.1) -> Tuple[Pytree, Pytree]:
+    """ZeRO sharded-update path (Rajbhandari et al. §5).
+
+    ``scatter`` is the sharding tree of the grad reduce-scatter layout
+    (``sharding.scatter_specs``), ``gather`` the params' storage layout.
+    Constraining the grads to ``scatter`` turns the partitioner's gradient
+    all-reduce into a reduce-scatter; the elementwise AdamW math then runs
+    on the local 1/p shard only (m/v/master are stored in — or moved to —
+    the same layout), and the single output constraint to ``gather``
+    all-gathers the updated params for the next forward.  The per-element
+    arithmetic is ``adamw_update`` verbatim, so the trajectory matches the
+    all-reduce step."""
+    wsc = jax.lax.with_sharding_constraint
+    grads = wsc(grads, scatter)
+    params_local = wsc(params, scatter)
+    opt_local = dict(opt_state, m=wsc(opt_state["m"], scatter),
+                     v=wsc(opt_state["v"], scatter))
+    if "master" in opt_state:
+        opt_local["master"] = wsc(opt_state["master"], scatter)
+    p_new, new_state = adamw_update(grads, opt_local, params_local, lr=lr,
+                                    b1=b1, b2=b2, eps=eps,
+                                    weight_decay=weight_decay)
+    return wsc(p_new, gather), new_state

@@ -11,6 +11,7 @@ Stacked (scanned) parameters get a leading ``None`` automatically by rank.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
@@ -23,7 +24,11 @@ from repro.models.moe import MeshCtx
 Pytree = Any
 
 
-def make_ctx(mesh: Mesh, parallel: ParallelConfig) -> MeshCtx:
+def make_ctx(mesh: Mesh, parallel) -> MeshCtx:
+    """MeshCtx from a layout — a ``ParallelConfig`` or a first-class
+    ``planner.ParallelPlan`` (bridged via ``to_pcfg``)."""
+    if hasattr(parallel, "to_pcfg"):
+        parallel = parallel.to_pcfg()
     axes = mesh.axis_names
     batch_axes = tuple(a for a in ("pod", "data") if a in axes)
     if parallel.dp_over_model:
@@ -115,12 +120,33 @@ def _leaf_spec(path: Tuple[str, ...], leaf, cfg: ModelConfig, ctx: MeshCtx,
     return P(*([None] * leaf.ndim))
 
 
-def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+# Partitions silently dropped by ``sanitize_spec`` make the realized layout
+# diverge from what the rule table (and the planner's cost predictions)
+# assumed — so every drop is counted here and surfaced: once as a warning,
+# and in full in the dry-run report (``dropped_partition_report``).
+_DROPPED: dict = {}
+_WARNED = [False]
+
+
+def reset_dropped_partitions() -> None:
+    _DROPPED.clear()
+
+
+def dropped_partition_report() -> list:
+    """Partitions dropped since the last reset: one record per (leaf, dim)
+    whose rule-table axes didn't divide the dim."""
+    return [dict(leaf=k[0], dim=k[1], **v) for k, v in sorted(_DROPPED.items())]
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                  path: Optional[str] = None) -> P:
     """Drop partitions on dims the mesh axes don't divide evenly (jit
-    in_shardings require exact divisibility, unlike constraints)."""
+    in_shardings require exact divisibility, unlike constraints).  Each drop
+    is recorded (warn once + dry-run report) so planner predictions can't
+    silently diverge from the realized layout."""
     parts = list(spec) + [None] * (len(shape) - len(spec))
     out = []
-    for dim, part in zip(shape, parts):
+    for i, (dim, part) in enumerate(zip(shape, parts)):
         if part is None:
             out.append(None)
             continue
@@ -128,7 +154,19 @@ def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
         size = 1
         for a in axes:
             size *= mesh.shape[a]
-        out.append(part if dim % size == 0 else None)
+        if dim % size == 0:
+            out.append(part)
+            continue
+        out.append(None)
+        _DROPPED[(path or "<anon>", i)] = {
+            "shape": tuple(shape), "axes": tuple(axes), "shard": size}
+        if not _WARNED[0]:
+            _WARNED[0] = True
+            warnings.warn(
+                f"sharding: dropped partition {axes} on dim {i} of "
+                f"{path or shape} ({dim} % {size} != 0) — the leaf stays "
+                "replicated on that dim; see dropped_partition_report() "
+                "for the full list", stacklevel=2)
     return P(*out)
 
 
@@ -153,9 +191,42 @@ def param_specs(params: Pytree, cfg: ModelConfig, ctx: MeshCtx) -> Pytree:
     def visit(path, leaf):
         names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         spec = strip_model(_leaf_spec(names, leaf, cfg, ctx, use_ep))
-        return sanitize_spec(spec, leaf.shape, ctx.mesh)
+        return sanitize_spec(spec, leaf.shape, ctx.mesh, path="/".join(names))
 
     return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def scatter_specs(params: Pytree, cfg: ModelConfig, ctx: MeshCtx) -> Pytree:
+    """ZeRO grad/optimizer layout: each leaf's param spec with the scatter
+    axes (the fsdp axes, else the batch axes — the grad-reduction group,
+    which includes 'model' under dp_over_model) added on the first free dim
+    they divide.  Leaves already sharded over a scatter axis (FSDP param
+    storage) and leaves with no divisible free dim keep their param spec —
+    those gradients stay all-reduced."""
+    axes = ctx.fsdp_axes or ctx.batch_axes
+    base = param_specs(params, cfg, ctx)
+    if not axes:
+        return base
+    size = 1
+    for a in axes:
+        size *= ctx.mesh.shape[a]
+    part = axes if len(axes) > 1 else axes[0]
+
+    def scatter(spec, leaf):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for p_ in parts:
+            used.update(p_ if isinstance(p_, tuple) else (p_,))
+        if used & set(axes):
+            return spec                      # FSDP already scatters this leaf
+        for i, (dim, p_) in enumerate(zip(leaf.shape, parts)):
+            if p_ is None and dim % size == 0 and dim >= size:
+                parts[i] = part
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(scatter, base, params,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def to_shardings(spec_tree: Pytree, mesh: Mesh) -> Pytree:
@@ -170,6 +241,10 @@ def shard_params(params: Pytree, cfg: ModelConfig, ctx: MeshCtx) -> Pytree:
     return jax.device_put(params, shardings)
 
 
-def opt_specs(param_spec_tree: Pytree) -> Pytree:
-    """Optimizer state specs: m/v mirror params; step replicated."""
-    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+def opt_specs(param_spec_tree: Pytree,
+              scatter_spec_tree: Optional[Pytree] = None) -> Pytree:
+    """Optimizer state specs: m/v mirror params — or, under the ZeRO
+    reduce-scatter strategy, the ``scatter_specs`` layout (each device keeps
+    only the moment shard it updates); step replicated."""
+    sp = scatter_spec_tree if scatter_spec_tree is not None else param_spec_tree
+    return {"m": sp, "v": sp, "step": P()}

@@ -19,7 +19,8 @@ from repro.models import transformer as T
 from repro.models import encdec as E
 from repro.models.moe import MeshCtx
 from repro import optim
-from .sharding import param_specs, opt_specs, to_shardings, batch_spec
+from .sharding import (param_specs, opt_specs, scatter_specs, to_shardings,
+                       batch_spec)
 
 Pytree = Any
 
@@ -104,6 +105,16 @@ def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
 # ---------------------------------------------------------------------------
 def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
                     ctx: Optional[MeshCtx]) -> Callable:
+    """Train step for a layout: dispatches on ``pcfg.grad_reduce`` — the
+    classic all-reduce step, or the ZeRO reduce-scatter step when a mesh ctx
+    is available to scatter over."""
+    if pcfg.grad_reduce == "reduce_scatter_zero":
+        if ctx is not None:
+            return make_train_step_zero(cfg, pcfg, tcfg, ctx)
+        import warnings
+        warnings.warn("grad_reduce='reduce_scatter_zero' needs a mesh ctx; "
+                      "falling back to the single-device all-reduce step",
+                      stacklevel=2)
     loss_fn = make_loss_fn(cfg, pcfg, tcfg, ctx)
 
     def train_step(state: Pytree, batch: Pytree) -> Tuple[Pytree, Pytree]:
@@ -129,6 +140,47 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
     return train_step
 
 
+def make_train_step_zero(cfg: ModelConfig, pcfg: ParallelConfig,
+                         tcfg: TrainConfig, ctx: MeshCtx) -> Callable:
+    """ZeRO train step: grads reduce-scattered over the fsdp (else data)
+    axes, AdamW updates only the local shard, params all-gathered for the
+    next forward (``optim.adamw_update_zero``).
+
+    Loss/grad/clip are token-for-token the all-reduce step — the clip norm
+    is taken on the reduced grads *before* the scatter so the two steps'
+    trajectories coincide; only the layout of the optimizer segment (and
+    hence its comm pattern: Θ(m·(p-1)/p) reduce-scatter + all-gather instead
+    of the Θ(2m·(p-1)/p) all-reduce feeding p redundant full updates)
+    differs."""
+    if ctx is None:
+        raise ValueError("make_train_step_zero needs a mesh ctx to scatter "
+                         "over; use make_train_step on a single device")
+    loss_fn = make_loss_fn(cfg, pcfg, tcfg, ctx)
+
+    def train_step(state: Pytree, batch: Pytree) -> Tuple[Pytree, Pytree]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        if pcfg.grad_barrier:
+            grads = lax.optimization_barrier(grads)
+        if pcfg.grad_dtype != "float32":
+            grads = jax.tree.map(lambda g: g.astype(pcfg.grad_dtype), grads)
+        grads, gnorm = optim.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = optim.warmup_cosine(state["opt"]["step"], lr=tcfg.lr,
+                                 warmup_steps=tcfg.warmup_steps,
+                                 total_steps=tcfg.total_steps)
+        scatter = to_shardings(scatter_specs(state["params"], cfg, ctx),
+                               ctx.mesh)
+        gather = to_shardings(param_specs(state["params"], cfg, ctx), ctx.mesh)
+        params, opt_state = optim.adamw_update_zero(
+            grads, state["opt"], state["params"], scatter=scatter,
+            gather=gather, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step
+
+
 def init_train_state(rng, cfg: ModelConfig, pcfg: ParallelConfig) -> Pytree:
     init = E.init if cfg.enc_dec else T.init
     params = init(rng, cfg)
@@ -147,9 +199,11 @@ def abstract_train_state(cfg: ModelConfig, pcfg: ParallelConfig) -> Pytree:
 def train_state_shardings(cfg: ModelConfig, pcfg: ParallelConfig,
                           ctx: MeshCtx, state: Pytree) -> Pytree:
     pspec = param_specs(state["params"], cfg, ctx)
-    ospec = opt_specs(pspec)
+    sspec = scatter_specs(state["params"], cfg, ctx) \
+        if pcfg.grad_reduce == "reduce_scatter_zero" else None
+    ospec = opt_specs(pspec, sspec)
     if "master" in state["opt"]:
-        ospec["master"] = pspec
+        ospec["master"] = sspec if sspec is not None else pspec
     tree = {"params": pspec, "opt": ospec}
     return to_shardings(tree, ctx.mesh)
 
@@ -183,7 +237,11 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
 
 
 def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
-                     ctx: Optional[MeshCtx]) -> Callable:
+                     ctx: Optional[MeshCtx], *,
+                     return_logits: bool = False) -> Callable:
+    """Decode step: greedy (argmax token) by default; ``return_logits``
+    hands back the f32 logits instead so the scheduler can sample
+    (temperature / top-p) in its slot loop."""
     def decode(params, token, cache, pos, enc_out=None):
         if cfg.enc_dec:
             logit, new_cache = E.decode_step(params, token, cache, pos, enc_out, cfg,
@@ -191,6 +249,8 @@ def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
         else:
             logit, new_cache = T.decode_step(params, token, cache, pos, cfg, ctx=ctx,
                                              unroll=pcfg.scan_unroll)
+        if return_logits:
+            return logit.astype(jnp.float32), new_cache
         return jnp.argmax(logit, axis=-1).astype(jnp.int32), new_cache
 
     return decode
