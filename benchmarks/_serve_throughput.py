@@ -1,4 +1,5 @@
-"""Benchmark: continuous-batching scheduler vs naive sequential serving.
+"""Benchmark: continuous-batching scheduler vs naive sequential serving,
+plus the paged-vs-end-aligned KV-cache A/B.
 
 The same engine (``launch/scheduler.py``) serves an identical staggered
 request stream twice — once with a single slot (the naive one-request-at-
@@ -6,12 +7,20 @@ a-time server) and once with a slot pool — so the A/B isolates exactly the
 continuous-batching win.  Both runs are warmed first (JIT compile excluded)
 and timed behind ``block_until_ready``.
 
-Next to each measured tok/s the Table-1-style serving cost model
-(``costmodel.decode_step_cost``) prediction is printed, calibrated the same
-way as _summa_vs_dns: the flops rate from a measured serial matmul and the
-per-step dispatch floor from a measured warm B=1 decode step, so the model's
-*batch-amortization* term — not the hardware constants — is what is tested.
-CSV: name,us_per_tok,derived.
+The paged rows then run the block-pool engine (``serving/kvcache.py``,
+chunked prefill admission): ``serve_paged`` serves the SAME short stream at
+the SAME total cache memory as the end-aligned pool (the layout tax A/B);
+``serve_paged_long`` serves a long-prompt mix whose big requests
+(prompt + gen > max_len) the end-aligned engine must reject at submit —
+asserted here — so that row measures capacity the rigid layout simply does
+not have.  Model columns: ``costmodel.paged_decode_step_cost`` (page-table
+gather term) next to ``decode_step_cost``.
+
+Next to each measured tok/s the Table-1-style serving cost model prediction
+is printed, calibrated the same way as _summa_vs_dns: the flops rate from a
+measured serial matmul and the per-step dispatch floor from a measured warm
+B=1 decode step, so the model's *batch-amortization* term — not the
+hardware constants — is what is tested.  CSV: name,us_per_tok,derived.
 
 REPRO_SERVE_SMOKE=1 shrinks everything for the CI smoke step.
 """
@@ -98,6 +107,54 @@ def main():
               f"slots={n_slots};requests={n_req}")
     assert results["batched"]["tok_s"] > results["sequential"]["tok_s"], \
         ("continuous batching must beat sequential serving", results)
+
+    # ---- paged-vs-end-aligned A/B -------------------------------------
+    # same slots and the same total cache memory as the end-aligned pool
+    # (pool_blocks * block == slots * max_len tokens)
+    block, chunk = (4, 4) if smoke else (8, 8)
+    pool_blocks = slots * max_len // block
+    kv_tok = kv_bytes_per_seq(cfg, 1)
+
+    def paged_row(name, reqs, max_len_paged, expect):
+        sched = Scheduler(cfg, pcfg, params, slots=slots,
+                          max_len=max_len_paged, paged=True, block=block,
+                          chunk=chunk, pool_blocks=pool_blocks)
+        sched.run(make_requests(2, prompt, 2, cfg.vocab))      # warmup/compile
+        sched.reset()
+        out = sched.run(reqs)
+        assert len(out["completions"]) == expect, out
+        # per-row KV traffic: the long-prompt mix streams ~2x the cache of
+        # the short mix, so the model column must be computed per scenario
+        model = costmodel.paged_decode_step_cost(
+            n_active, slots, kv_bytes_per_seq(cfg, max_len_paged),
+            block=block, kv_token_bytes=kv_tok,
+            peak_flops=flops_rate, overhead_s=overhead)
+        rep = out["pool"]
+        print(f"serve_{name},{out['wall_s'] / out['generated'] * 1e6:.0f},"
+              f"tok_s={out['tok_s']:.1f};model_tok_s={model['tok_s']:.1f};"
+              f"slots={slots};block={block};chunk={chunk};"
+              f"peak_occ={rep['peak_occupancy']:.2f};"
+              f"frag={rep['frag_at_peak']:.2f}")
+        return out
+
+    paged_row("paged", make_requests(n_req, prompt, gen, cfg.vocab,
+                                     stagger=stagger), max_len, n_req)
+
+    # long-prompt mix: the big requests exceed the per-slot row, so the
+    # end-aligned engine MUST reject them at submit — the paged engine
+    # serves the whole mix out of the same pool memory
+    long_prompt = max_len + gen                  # prompt alone > max_len
+    n_long = max(2, n_req // 2)
+    long_reqs = make_requests(n_long, long_prompt, gen, cfg.vocab,
+                              stagger=stagger, seed=5)
+    ea = Scheduler(cfg, pcfg, params, slots=slots, max_len=max_len)
+    for r in long_reqs:
+        try:
+            ea.submit(r)
+            raise AssertionError(f"end-aligned accepted over-long {r.rid}")
+        except ValueError:
+            pass
+    paged_row("paged_long", long_reqs, long_prompt + gen, n_long)
 
 
 if __name__ == "__main__":

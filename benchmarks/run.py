@@ -63,10 +63,14 @@ BENCH_JSON = {
     },
     "serve_": {
         "path": SERVE_JSON,
+        # paged rows carry extra block/chunk/occupancy fields (optional
+        # trailing group; absent fields are skipped in the record)
         "pattern": r"^serve_(\w+),(\d+),tok_s=([\d.]+);model_tok_s=([\d.]+)"
-                   r";slots=(\d+)",
+                   r";slots=(\d+)(?:;block=(\d+);chunk=(\d+)"
+                   r";peak_occ=([\d.]+);frag=([\d.]+))?",
         "fields": (("us_per_tok", int), ("tok_s", float),
-                   ("model_tok_s", float), ("slots", int)),
+                   ("model_tok_s", float), ("slots", int), ("block", int),
+                   ("chunk", int), ("peak_occ", float), ("frag", float)),
     },
     "train_": {
         "path": TRAIN_JSON,
@@ -85,7 +89,7 @@ def _write_bench_json(spec: dict, lines: list) -> None:
             continue
         key = m.group(1)
         rec = {name: typ(val) for (name, typ), val
-               in zip(spec["fields"], m.groups()[1:])}
+               in zip(spec["fields"], m.groups()[1:]) if val is not None}
         if key not in table or spec.get("keep", lambda o, n: True)(table[key], rec):
             table[key] = rec
     if table:

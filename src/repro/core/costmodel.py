@@ -209,6 +209,79 @@ def prefill_cost(n_params_active: float, prompt_tokens: float, *,
     }
 
 
+def paged_decode_step_cost(n_params_active: float, batch: int,
+                           kv_bytes: float, *, block: int,
+                           kv_token_bytes: float, chips: int = 1,
+                           bytes_per_param: int = 2, overhead_s: float = 0.0,
+                           table_entry_bytes: int = 4,
+                           t_page_issue: float = 5e-8,
+                           peak_flops: float = PEAK_FLOPS_BF16,
+                           hbm_bw: float = HBM_BW) -> dict:
+    """``decode_step_cost`` plus the page-table-gather term: the KV stream
+    is no longer one contiguous row per sequence but ``pages`` block reads
+    *through* the table, so each page costs its table entry
+    (``table_entry_bytes``) on the wire plus an amortized non-contiguous
+    issue latency ``t_page_issue`` (descriptor setup; pages overlap, so the
+    per-page constant is small).  The term vanishes as ``block`` grows —
+    ``block → seq`` recovers the dense cost, which is exactly the layout
+    tradeoff: big pages gather cheap but waste pool capacity to internal
+    fragmentation (``BlockPool.report``), small pages pack tight but pay
+    the gather."""
+    pages = max(1, -(-int(kv_bytes / kv_token_bytes) // block)) \
+        if kv_token_bytes > 0 else 1
+    compute = 2.0 * n_params_active * batch / (chips * peak_flops)
+    gather_bytes = batch * pages * table_entry_bytes
+    memory = (n_params_active * bytes_per_param + batch * kv_bytes
+              + gather_bytes) / (chips * hbm_bw)
+    gather = batch * pages * t_page_issue / chips
+    total = max(compute, memory + gather) + overhead_s
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "gather_s": gather,
+        "pages_per_seq": pages,
+        "dominant": "compute_s" if compute >= memory + gather else "memory_s",
+        "total_s": total,
+        "tok_s": batch / total if total > 0 else float("inf"),
+    }
+
+
+def chunked_prefill_cost(n_params_active: float, prompt_tokens: float,
+                         chunk: int, *, chips: int = 1,
+                         bytes_per_param: int = 2,
+                         kv_token_bytes: float = 0.0,
+                         peak_flops: float = PEAK_FLOPS_BF16,
+                         hbm_bw: float = HBM_BW) -> dict:
+    """Prefill consumed in ``chunk``-token slices interleaved with decode
+    ticks.  Chunking re-streams the parameters once per chunk (the fused
+    call streams them once total) and re-reads the growing KV prefix each
+    chunk (Θ(prompt²/2·chunk) extra KV traffic), so ``total_s`` rises as
+    ``chunk`` shrinks — but ``stall_s``, the single-chunk cost and hence
+    the longest any in-flight decode tick can be delayed by one admission,
+    falls with it.  That stall bound is what chunked admission buys; the
+    fused prefill is the ``chunk >= prompt`` corner (one "chunk", maximal
+    stall)."""
+    chunk = max(1, min(int(chunk), int(prompt_tokens)))
+    n_chunks = -(-int(prompt_tokens) // chunk)
+    compute = 2.0 * n_params_active * prompt_tokens / (chips * peak_flops)
+    param_stream = n_chunks * n_params_active * bytes_per_param / (chips * hbm_bw)
+    kv_restream = (prompt_tokens ** 2 / (2.0 * chunk)) * kv_token_bytes \
+        / (chips * hbm_bw)
+    memory = param_stream + kv_restream
+    total = max(compute, memory)
+    stall = max(2.0 * n_params_active * chunk / (chips * peak_flops),
+                n_params_active * bytes_per_param / (chips * hbm_bw))
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "n_chunks": n_chunks,
+        "stall_s": stall,
+        "dominant": "compute_s" if compute >= memory else "memory_s",
+        "total_s": total,
+        "tok_s": prompt_tokens / total if total > 0 else float("inf"),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Train-step memory + time model (what ``parallel/planner.py`` scores).
 # Each comm term is a Table-1 collective: the TP activation combines are

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from .matmul import matmul_acc_pallas, matmul_pallas
 from .minplus import minplus_pallas
 from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_attention_pallas
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -45,4 +46,14 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                     bq=256, bkv=512, interpret: bool | None = None):
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   scale=scale, bq=bq, bkv=bkv,
+                                  interpret=_auto_interpret(interpret))
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale=None, interpret: bool | None = None):
+    """Paged decode attention through block tables (interpret-mode harness;
+    the serving path auto-dispatches via ``paged_attention.paged_attention``
+    which falls back to the jnp reference off-TPU)."""
+    return paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                  scale=scale,
                                   interpret=_auto_interpret(interpret))

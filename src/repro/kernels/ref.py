@@ -5,6 +5,8 @@ tests/test_kernels.py across shape/dtype sweeps).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -17,6 +19,40 @@ def matmul(a: jax.Array, b: jax.Array, *, out_dtype=jnp.float32) -> jax.Array:
 def minplus(a: jax.Array, b: jax.Array) -> jax.Array:
     """(min, +) matrix product: C[i,j] = min_k A[i,k] + B[k,j]."""
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Paged decode-attention oracle: one query token per request, K/V
+    gathered through the block table.
+
+    q: (B, Hkv, rep, hd) — grouped query heads (GQA: rep = Hq // Hkv).
+    k_pages, v_pages: (N, block, Hkv, hd) — the shared page arenas.
+    block_tables: (B, P) int32 — request b's logical page j lives in
+    physical block ``block_tables[b, j]``; -1 marks an unallocated tail
+    entry (its keys are masked, the gather clamps the index).
+    lengths: (B,) int32 — valid tokens per request (key positions
+    >= lengths[b] masked, incl. the partially-filled last page).
+
+    Dtype discipline mirrors ``models.layers._sdpa`` exactly (f32 scores and
+    softmax, probabilities cast back to q.dtype for the PV contraction) so
+    the paged decode engine's greedy tokens match the end-aligned engine's.
+    """
+    b, hkv, rep, hd = q.shape
+    n, blk, _, _ = k_pages.shape
+    p = block_tables.shape[1]
+    idx = jnp.maximum(block_tables, 0)                   # clamp -1 entries
+    k = k_pages[idx].reshape(b, p * blk, hkv, hd)        # (B, K, Hkv, hd)
+    v = v_pages[idx].reshape(b, p * blk, hkv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", q * scale, k,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(p * blk)
+    mask = kpos[None, :] < lengths[:, None]              # (B, K)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrk,bkgd->bgrd", probs, v,
+                      preferred_element_type=q.dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

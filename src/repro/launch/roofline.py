@@ -178,6 +178,27 @@ def serve_table(arch: str, prompt: int, gen: int, chips: int = 1) -> str:
     rows.append(f"(prefill {prompt} toks: {pre['total_s'] * 1e3:.2f} ms fused "
                 f"vs {prompt * naive['total_s'] * 1e3:.2f} ms as a decode "
                 f"loop — {cfg.name}, {chips} chip(s))")
+    # paged engine: page-table-gather tax vs block size, and the chunked-
+    # prefill stall bound vs the fused call's whole-prompt stall
+    kv_tok = kv_bytes_per_seq(cfg, 1)
+    rows.append("")
+    rows.append("| paged (32 slots) | block | pages/seq | tok/s | vs dense | "
+                "chunk | admission stall_s |")
+    rows.append("|---|---|---|---|---|---|---|")
+    dense = costmodel.decode_step_cost(n_active, 32, kv, chips=chips)
+    for blk, chunk in ((16, 256), (64, 1024), (256, 4096)):
+        pc = costmodel.paged_decode_step_cost(n_active, 32, kv, block=blk,
+                                              kv_token_bytes=kv_tok,
+                                              chips=chips)
+        cp = costmodel.chunked_prefill_cost(n_active, prompt, chunk,
+                                            chips=chips,
+                                            kv_token_bytes=kv_tok)
+        rows.append(f"| paged | {blk} | {pc['pages_per_seq']} | "
+                    f"{pc['tok_s']:.1f} | {pc['tok_s'] / dense['tok_s']:.3f}× "
+                    f"| {chunk} | {cp['stall_s']:.3e} |")
+    rows.append(f"(fused prefill stalls every in-flight decode for "
+                f"{pre['total_s']:.3e} s; a chunk stalls it for one slice — "
+                f"the paged/chunked engine caps it at the chunk column)")
     return "\n".join(rows)
 
 

@@ -9,9 +9,14 @@ families fall back to a per-token loop), then requests share a fixed slot
 pool: staggered arrivals are admitted into free slots mid-flight, finished
 requests evicted, greedy tokens streamed per request
 (``launch/scheduler.py``).  ``--naive`` serves one request at a time
-(slots=1) for an A/B against the batched engine.  A warmup pass runs first
-so JIT compile time never lands in the reported tok/s, and every timing
-reads after ``jax.block_until_ready``.
+(slots=1) for an A/B against the batched engine.  ``--paged`` switches to
+the paged KV-cache engine (``serving/kvcache.py``): admission becomes
+chunked prefill (``--chunk`` tokens per tick) writing into ``--block``-token
+pages of a shared arena, request length is bounded by pool capacity instead
+of the per-slot row, and the end-of-run report includes the pool's
+occupancy / fragmentation.  A warmup pass runs first so JIT compile time
+never lands in the reported tok/s, and every timing reads after
+``jax.block_until_ready``.
 """
 from __future__ import annotations
 
@@ -37,6 +42,16 @@ def main():
                     help="ticks (decode steps) between request arrivals")
     ap.add_argument("--naive", action="store_true",
                     help="one-request-at-a-time baseline (slots=1)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache engine: block-pool arena + chunked "
+                         "prefill admission (pure-attention archs)")
+    ap.add_argument("--block", type=int, default=16,
+                    help="page size in tokens (only with --paged)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill tokens consumed per tick (only with --paged)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="total pages in the pool (default: slots x "
+                         "ceil(max_len/block), the end-aligned memory)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy (the default "
                          "and the test oracle)")
@@ -50,6 +65,9 @@ def main():
                  f"(got {args.requests}/{args.gen})")
     if args.prompt_len < 0 or args.slots < 1 or args.stagger < 0:
         ap.error("--prompt-len/--stagger must be >= 0 and --slots >= 1")
+    if args.block < 1 or args.chunk < 1 or \
+            (args.pool_blocks is not None and args.pool_blocks < 1):
+        ap.error("--block/--chunk/--pool-blocks must be >= 1")
     if args.temperature < 0 or not 0 < args.top_p <= 1:
         ap.error("--temperature must be >= 0 and --top-p in (0, 1]")
     if args.prompt_len + args.gen < 2:
@@ -59,6 +77,10 @@ def main():
     cfg = reduced(configs.get(args.arch))
     if cfg.enc_dec:
         raise SystemExit("enc-dec serving: use examples/whisper_serve.py")
+    if args.paged and not T.supports_paged(cfg):
+        raise SystemExit(f"--paged needs a pure-attention no-SWA arch; "
+                         f"{cfg.name} has pattern {cfg.block_pattern} "
+                         f"(window={cfg.window})")
     # single-host CPU layout as a first-class plan (the scheduler bridges it)
     plan = planner.ParallelPlan(mesh_shape=(1, 1), fsdp_axes=(), tp=1,
                                 grad="none", remat="none")
@@ -66,12 +88,14 @@ def main():
 
     slots = 1 if args.naive else args.slots
     max_len = args.prompt_len + args.gen
-    if cfg.window is not None and max_len > cfg.window:
+    if not args.paged and cfg.window is not None and max_len > cfg.window:
         raise SystemExit(f"prompt+gen {max_len} exceeds the reduced "
-                         f"attention window {cfg.window}")
+                         f"attention window {cfg.window} (end-aligned slots; "
+                         f"--paged lifts the limit for no-SWA archs)")
     sched = Scheduler(cfg, plan, params, slots=slots, max_len=max_len,
                       temperature=args.temperature, top_p=args.top_p,
-                      seed=args.seed)
+                      seed=args.seed, paged=args.paged, block=args.block,
+                      chunk=args.chunk, pool_blocks=args.pool_blocks)
 
     # warmup: compile prefill/decode/insert outside the timed run
     sched.run(make_requests(min(2, args.requests), args.prompt_len,
@@ -84,6 +108,9 @@ def main():
     comps = out["completions"]
     assert len(comps) == args.requests, (len(comps), args.requests)
     mode = "naive (1 slot)" if args.naive else f"batched ({slots} slots)"
+    if args.paged:
+        mode += f", paged (block={args.block} chunk={args.chunk} " \
+                f"pool={sched.pool.n_blocks})"
     if args.temperature > 0:
         mode += f", T={args.temperature} top_p={args.top_p}"
     ttft = sorted(c.ttft_s for c in comps.values())
@@ -93,6 +120,12 @@ def main():
     print(f"ttft (admission->first token) p50/p99: "
           f"{ttft[len(ttft) // 2] * 1e3:.1f}/"
           f"{ttft[int(len(ttft) * 0.99)] * 1e3:.1f} ms")
+    if args.paged:
+        rep = out["pool"]
+        print(f"pool: {rep['n_blocks']} blocks x {rep['block']} toks, peak "
+              f"occupancy {rep['peak_occupancy']:.2f}, end occupancy "
+              f"{rep['occupancy']:.2f}, internal fragmentation at peak "
+              f"{rep['frag_at_peak']:.2f}")
     print("sample:", comps[0].tokens[:12])
 
 

@@ -189,6 +189,7 @@ def attention(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *
               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_pos: Optional[jax.Array] = None,
               xattn_kv: Optional[jax.Array] = None,
+              block_tables: Optional[jax.Array] = None,
               ctx=None,
               ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Self- (or cross-) attention.
@@ -196,6 +197,10 @@ def attention(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *
     Train/prefill: ``cache=None`` — full causal attention over x.
     Decode: ``cache=(k, v)`` of length L; the new token's k/v are written at
     ``cache_pos`` (already ring-reduced for SWA), then q attends to the cache.
+    Paged decode/prefill: ``block_tables`` given — ``cache`` is the shared
+    page *arena* ``(n_blocks, block, Hkv, hd)`` and each request reads/writes
+    through its block-table row (the page view; ``serving/kvcache.py`` owns
+    the host-side allocation).
     Cross-attention (whisper): ``xattn_kv`` is the encoder output; keys/values
     are computed from it, no cache/causality.
 
@@ -230,7 +235,53 @@ def attention(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *
         k = rope(k, positions, cfg)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # ---- paged cache: requests read/write the shared page arena
+        # through their block-table rows (chains of fixed-size pages replace
+        # the per-slot end-aligned row, so prompt+gen is bounded by pool
+        # capacity, not slot length).  SWA rings and paging don't compose.
+        assert cfg.window is None, "paged attention needs full (no-SWA) attention"
+        ck, cv = cache                    # (n_blocks, block, Hkv, hd) arenas
+        n_blocks, blk = ck.shape[0], ck.shape[1]
+        if jnp.ndim(cache_pos) == 1:
+            # decode: each request writes its token at page pos//block,
+            # offset pos%block of its own chain; rows whose table entry is
+            # -1 (parked/free slots) map OOB and the write drops
+            pg, off = cache_pos // blk, cache_pos % blk
+            entry = jnp.take_along_axis(block_tables, pg[:, None], axis=1)[:, 0]
+            phys = jnp.where(entry >= 0, entry, n_blocks)
+            ck = ck.at[phys, off].set(k[:, 0].astype(ck.dtype), mode="drop")
+            cv = cv.at[phys, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+            from repro.kernels.paged_attention import paged_attention
+            out = paged_attention(q[:, 0], ck, cv, block_tables,
+                                  cache_pos + 1)[:, None]
+        else:
+            # chunked prefill (one request, B=1): the chunk's tokens land at
+            # absolute positions cache_pos..cache_pos+s-1 through the table,
+            # then attend causally against the gathered page view.  Writes
+            # from right-pad tokens are harmless: every position is
+            # re-written by its real token (next chunk / decode step) before
+            # any query ever attends to it, and pad queries' outputs are
+            # dropped by the length pick.
+            assert b == 1, "chunked prefill runs one request per call"
+            tpos = cache_pos + jnp.arange(s)
+            pg, off = tpos // blk, tpos % blk
+            # pad-token positions can run past the table width; an unguarded
+            # gather would CLAMP to the last (live!) entry and scatter pad
+            # K/V over real tokens — route them OOB so the write drops
+            n_pages = block_tables.shape[1]
+            entry = jnp.where(pg < n_pages,
+                              block_tables[0, jnp.minimum(pg, n_pages - 1)],
+                              -1)
+            phys = jnp.where(entry >= 0, entry, n_blocks)
+            ck = ck.at[phys, off].set(k[0].astype(ck.dtype), mode="drop")
+            cv = cv.at[phys, off].set(v[0].astype(cv.dtype), mode="drop")
+            idx = jnp.maximum(block_tables, 0)
+            out = _sdpa(q, ck[idx].reshape(b, -1, hkv, hd),
+                        cv[idx].reshape(b, -1, hkv, hd),
+                        causal=True, window=None, q_offset=cache_pos)
+        new_cache = (ck, cv)
+    elif cache is not None:
         ck, cv = cache  # (B, L, Hkv, hd), L sharded over model
         lk = ck.shape[1]
         if jnp.ndim(cache_pos) == 1:

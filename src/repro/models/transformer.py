@@ -55,8 +55,11 @@ def _block_init(kind: str, rng, cfg: ModelConfig) -> Params:
 
 def _block_apply(kind: str, p: Params, h: jax.Array, positions, cfg: ModelConfig,
                  ctx, cache: Optional[dict], cache_pos,
-                 shared_attn: Optional[Params]) -> Tuple[jax.Array, Optional[dict], jax.Array]:
-    """Returns (h, new_cache, aux_loss_contribution)."""
+                 shared_attn: Optional[Params],
+                 block_tables=None) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (h, new_cache, aux_loss_contribution).  ``block_tables``
+    switches the attention cache to the paged page-arena view (pure
+    attention patterns only — ``supports_paged``)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Any = None
 
@@ -64,7 +67,8 @@ def _block_apply(kind: str, p: Params, h: jax.Array, positions, cfg: ModelConfig
         a_cache = cache.get("attn") if cache else None
         x1 = L.apply_norm(p["ln1"], h, cfg)
         attn_out, a_new = L.attention(p["attn"], x1, positions, cfg,
-                                      cache=a_cache, cache_pos=cache_pos, ctx=ctx)
+                                      cache=a_cache, cache_pos=cache_pos,
+                                      block_tables=block_tables, ctx=ctx)
         if cfg.parallel_block:
             # command-r style: attn ∥ mlp read the same normed input
             if kind == "attn":
@@ -242,6 +246,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), percell)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when the paged KV-cache engine can serve this config: pure
+    attention patterns (pages hold K/V lines only — recurrent state has no
+    per-position layout to page) with full attention (an SWA ring is itself
+    a reuse scheme; it does not compose with page chains)."""
+    return (not cfg.enc_dec and cfg.window is None
+            and all(k in ("attn", "attn_moe") for k in cfg.block_pattern))
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block: int,
+                     dtype=jnp.bfloat16) -> Any:
+    """Paged cache arena pytree, stacked over periods like ``init_cache``:
+    per attention layer one (K, V) pair of ``(n_blocks, block, kv_heads,
+    hd)`` pages shared by every request (``serving.BlockPool`` hands out the
+    blocks; requests address them through block tables)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV cache needs a pure-attention, no-SWA pattern; got "
+            f"{cfg.block_pattern} (window={cfg.window})")
+    shp = (n_blocks, block, cfg.n_kv_heads, cfg.hd)
+    percell = tuple({"attn": (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))}
+                    for _ in cfg.block_pattern)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), percell)
+
+
 def supports_fused_prefill(cfg: ModelConfig) -> bool:
     """True when ``prefill`` handles arbitrary (right-padded, any-length)
     prompts: pure-attention patterns, where causal masking makes end-padding
@@ -300,11 +330,48 @@ def prefill(params: Params, tokens: jax.Array, cache: Any, cfg: ModelConfig, *,
     return logit, new_cache
 
 
+def prefill_paged(params: Params, tokens: jax.Array, cache: Any,
+                  cfg: ModelConfig, *, pos0, block_tables: jax.Array,
+                  length=None, ctx=None,
+                  unroll: int = 1) -> Tuple[jax.Array, Any]:
+    """One chunked-prefill slice: tokens (1, C) land at absolute positions
+    ``pos0..pos0+C-1`` of one request's paged sequence (its pages named by
+    ``block_tables`` (1, P)), writing K/V into the arena and attending
+    causally over everything written so far.  ``length``: true token count
+    of a right-padded final chunk.  Returns (logits at the chunk's last real
+    token (1, V) f32, new_cache) — only the final chunk's logits are used
+    (they seed the first generated token)."""
+    period = cfg.block_pattern
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens, cfg)
+    positions = pos0 + jnp.arange(s)
+    shared_attn = params.get("shared_attn")
+
+    def period_fn(h, xs):
+        layer_p, cache_p = xs
+        new_caches = []
+        for i, kind in enumerate(period):
+            h, nc, _ = _block_apply(kind, layer_p[i], h, positions, cfg, ctx,
+                                    cache_p[i], pos0, shared_attn,
+                                    block_tables=block_tables)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    h, new_cache = lax.scan(period_fn, h, (params["layers"], cache), unroll=unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    idx = (jnp.asarray(length) if length is not None else s) - 1
+    h_last = h[jnp.arange(b), jnp.broadcast_to(idx, (b,))]
+    return L.logits(params["embed"], h_last[:, None], cfg)[:, 0], new_cache
+
+
 def decode_step(params: Params, token: jax.Array, cache: Any, pos: jax.Array,
-                cfg: ModelConfig, *, ctx=None, unroll: int = 1) -> Tuple[jax.Array, Any]:
+                cfg: ModelConfig, *, ctx=None, unroll: int = 1,
+                block_tables=None) -> Tuple[jax.Array, Any]:
     """One decode step.  token: (B,) int32; pos: scalar absolute position, or
     a (B,) vector of per-row positions (continuous-batching slots advance
-    independently).  Returns (logits (B, V) f32, new_cache)."""
+    independently).  ``block_tables`` (B, P): paged mode — ``cache`` is the
+    page arena and each row addresses its own page chain.  Returns
+    (logits (B, V) f32, new_cache)."""
     period = cfg.block_pattern
     h = L.embed(params["embed"], token[:, None], cfg)       # (B, 1, d)
     positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
@@ -316,7 +383,8 @@ def decode_step(params: Params, token: jax.Array, cache: Any, pos: jax.Array,
         new_caches = []
         for i, kind in enumerate(period):
             h, nc, _ = _block_apply(kind, layer_p[i], h, positions, cfg, ctx,
-                                    cache_p[i], cache_pos, shared_attn)
+                                    cache_p[i], cache_pos, shared_attn,
+                                    block_tables=block_tables)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

@@ -238,10 +238,17 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
 
 def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
                      ctx: Optional[MeshCtx], *,
-                     return_logits: bool = False) -> Callable:
+                     return_logits: bool = False,
+                     paged: bool = False) -> Callable:
     """Decode step: greedy (argmax token) by default; ``return_logits``
     hands back the f32 logits instead so the scheduler can sample
-    (temperature / top-p) in its slot loop."""
+    (temperature / top-p) in its slot loop.  ``paged``: the step takes
+    ``(params, tok, cache, pos, block_tables)`` — the cache is the shared
+    page arena and every request reads/writes through its table row, so the
+    paged and end-aligned modes share one fixed-shape engine."""
+    if paged and cfg.enc_dec:
+        raise NotImplementedError("paged decode is decoder-only")
+
     def decode(params, token, cache, pos, enc_out=None):
         if cfg.enc_dec:
             logit, new_cache = E.decode_step(params, token, cache, pos, enc_out, cfg,
@@ -253,4 +260,32 @@ def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
             return logit.astype(jnp.float32), new_cache
         return jnp.argmax(logit, axis=-1).astype(jnp.int32), new_cache
 
-    return decode
+    def decode_paged(params, token, cache, pos, block_tables):
+        logit, new_cache = T.decode_step(params, token, cache, pos, cfg,
+                                         ctx=ctx, unroll=pcfg.scan_unroll,
+                                         block_tables=block_tables)
+        if return_logits:
+            return logit.astype(jnp.float32), new_cache
+        return jnp.argmax(logit, axis=-1).astype(jnp.int32), new_cache
+
+    return decode_paged if paged else decode
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                            ctx: Optional[MeshCtx]) -> Callable:
+    """Chunked-prefill step for the paged engine: one fixed-shape (1, chunk)
+    slice of one request's prompt per call — K/V written into freshly
+    allocated pages through the block table, ``(last_logits, cache)`` back
+    (``models.transformer.prefill_paged``).  Fixed chunk shape means ONE
+    compile regardless of prompt length, and the per-call cost bounds the
+    stall any admission can inflict on in-flight decodes
+    (``costmodel.chunked_prefill_cost``)."""
+    if cfg.enc_dec:
+        raise NotImplementedError("chunked prefill is decoder-only")
+
+    def chunk_prefill(params, tokens, cache, pos0, block_tables, length):
+        return T.prefill_paged(params, tokens, cache, cfg, pos0=pos0,
+                               block_tables=block_tables, length=length,
+                               ctx=ctx, unroll=pcfg.scan_unroll)
+
+    return chunk_prefill

@@ -302,11 +302,13 @@ def test_serve_cli_rejects_bad_args(monkeypatch):
 @pytest.mark.slow
 def test_serve_cli_runs_including_empty_prompt():
     """The launcher end-to-end, including --prompt-len 0 (used to NameError
-    on the unbound first token) and the --naive A/B flag."""
+    on the unbound first token), the --naive A/B flag, and the paged engine
+    (whose report must include the pool occupancy/fragmentation line)."""
     import os
     env = {**os.environ, "PYTHONPATH": "src"}
     cwd = os.path.join(os.path.dirname(__file__), "..")
-    for extra in (["--prompt-len", "0"], ["--naive"]):
+    for extra in (["--prompt-len", "0"], ["--naive"],
+                  ["--paged", "--block", "4", "--chunk", "4"]):
         r = subprocess.run(
             [sys.executable, "-m", "repro.launch.serve", "--arch",
              "llama3.2-3b", "--requests", "2", "--prompt-len", "4", "--gen",
@@ -314,3 +316,5 @@ def test_serve_cli_runs_including_empty_prompt():
             capture_output=True, text=True, timeout=600, env=env, cwd=cwd)
         assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
         assert "served 2 requests" in r.stdout
+        if "--paged" in extra:
+            assert "peak occupancy" in r.stdout
